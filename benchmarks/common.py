@@ -1,0 +1,78 @@
+"""Shared benchmark scaffolding.
+
+Scale profiles (env REPRO_BENCH_SCALE or --scale):
+  smoke — CI-sized: 3 clients, 160 ex/client, 4 rounds (~minutes on CPU)
+  std   — 5 clients, 400 ex/client, 12 rounds (default for bench_output)
+  paper — the paper's protocol: 5 clients, 1000 ex/client, 20 rounds
+
+Budgets for the C3-Score are the worst-performing method's consumption
+on the same run (the paper's §5 convention).
+"""
+from __future__ import annotations
+
+import csv
+import io
+import os
+import sys
+import time
+from dataclasses import dataclass
+
+from repro.configs.base import get_config
+from repro.data.synthetic import mixed_cifar, mixed_noniid
+
+
+@dataclass(frozen=True)
+class Scale:
+    n_clients: int
+    n_per_client: int
+    n_test: int
+    rounds: int
+
+
+SCALES = {
+    "smoke": Scale(3, 160, 60, 4),
+    "std": Scale(5, 400, 120, 16),
+    "paper": Scale(5, 1000, 200, 20),
+}
+
+
+def scale() -> Scale:
+    name = os.environ.get("REPRO_BENCH_SCALE", "std")
+    for a in sys.argv[1:]:
+        if a.startswith("--scale="):
+            name = a.split("=", 1)[1]
+    return SCALES[name]
+
+
+def lenet_cfg():
+    return get_config("lenet-cifar")
+
+
+def dataset(protocol: str, sc: Scale, seed: int = 0):
+    mk = mixed_noniid if protocol == "noniid" else mixed_cifar
+    return mk(sc.n_clients, sc.n_per_client, sc.n_test, seed=seed)
+
+
+def emit(table: str, rows, header):
+    """Print a CSV block (captured into bench_output.txt)."""
+    buf = io.StringIO()
+    w = csv.writer(buf)
+    w.writerow(header)
+    for r in rows:
+        w.writerow(r)
+    print(f"### {table}")
+    print(buf.getvalue().rstrip())
+    print()
+
+
+def c3_budgets(results):
+    """(B_max, C_max) = worst consumption across methods (paper §5)."""
+    bmax = max(r["bandwidth_gb"] for r in results)
+    cmax = max(r["client_tflops"] for r in results)
+    return max(bmax, 1e-9), max(cmax, 1e-9)
+
+
+def timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, time.time() - t0

@@ -1,0 +1,65 @@
+"""Benchmark runner — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--scale=smoke|std|paper]
+                                          [--only=table1,table4,...]
+
+Sections: table1 table2 (comparisons), table3..table6 (sensitivity),
+fig1 (trade-off curve), kernels (microbench), roofline (if dry-run
+artifacts exist).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    only = None
+    for a in sys.argv[1:]:
+        if a.startswith("--only="):
+            only = set(a.split("=", 1)[1].split(","))
+    t0 = time.time()
+
+    from benchmarks import ablation_masks, comparison, fig1_tradeoff, \
+        kernel_bench, sensitivity
+
+    sections = [
+        ("table1", comparison.table1),
+        ("table2", comparison.table2),
+        ("table3", sensitivity.table3),
+        ("table4", sensitivity.table4),
+        ("table5", sensitivity.table5),
+        ("table6", sensitivity.table6),
+        ("fig1", fig1_tradeoff.main),
+        ("ablation_masks", ablation_masks.main),
+        ("kernels", kernel_bench.main),
+    ]
+    for name, fn in sections:
+        if only and name not in only:
+            continue
+        t = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the suite going, report at end
+            print(f"### {name} FAILED: {e!r}\n")
+        print(f"[{name} done in {time.time()-t:.0f}s]\n")
+
+    # roofline summary from dry-run artifacts, if present
+    if only is None or "roofline" in only:
+        try:
+            from repro.launch import roofline
+            recs = roofline.load("pod")
+            if recs:
+                print("### roofline (single-pod, from artifacts/dryrun)")
+                for r in recs:
+                    print(roofline.fmt_row(r))
+                print()
+        except Exception as e:
+            print(f"### roofline skipped: {e!r}\n")
+
+    print(f"benchmarks completed in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

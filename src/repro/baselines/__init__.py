@@ -1,0 +1,25 @@
+"""Baselines the paper compares against (§4.2).
+
+Federated: FedAvg, FedProx, Scaffold, FedNova (repro.baselines.fed).
+Split:     SL-basic (Gupta & Raskar), SplitFed (repro.baselines.split).
+
+All use the paper's LeNet backbone + the same synthetic Mixed-CIFAR /
+Mixed-NonIID protocols, metered with the same eq. 1-2 accounting, so
+Tables 1-2 and the C3-Score comparisons are apples-to-apples.
+"""
+from repro.baselines.fed import FedTrainer, FedHParams
+from repro.baselines.split import SplitTrainer, SplitHParams
+
+BASELINES = ("fedavg", "fedprox", "scaffold", "fednova",
+             "sl-basic", "splitfed")
+
+
+def make_trainer(name: str, cfg, clients, **kw):
+    name = name.lower()
+    if name in ("fedavg", "fedprox", "scaffold", "fednova"):
+        hp = FedHParams(algorithm=name, **kw)
+        return FedTrainer(cfg, hp, clients)
+    if name in ("sl-basic", "splitfed"):
+        hp = SplitHParams(algorithm=name, **kw)
+        return SplitTrainer(cfg, hp, clients)
+    raise KeyError(name)

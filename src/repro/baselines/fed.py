@@ -1,0 +1,181 @@
+"""Federated baselines: FedAvg / FedProx / Scaffold / FedNova.
+
+One trainer, four aggregation/objective variants — matching how the
+paper benchmarks them (LeNet backbone, R rounds x 1 local epoch, Adam
+on-client for FedAvg/FedProx/FedNova; Scaffold uses its canonical SGD +
+control-variate correction).
+
+Accounting (paper eq. 1-2): the full model travels client->server and
+server->client once per round (Scaffold additionally moves the control
+variates, doubling payload); ALL training FLOPs are client-side.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.accounting import Meter, lenet_flops_per_example
+from repro.core.c3 import c3_score
+from repro.core.losses import accuracy, cross_entropy
+from repro.data.synthetic import batch_iterator
+from repro.models import lenet
+from repro.optim.adam import adam_init, adam_update
+from repro.utils.tree import (tree_add, tree_bytes, tree_scale, tree_sub,
+                              tree_zeros_like)
+
+
+@dataclass
+class FedHParams:
+    algorithm: str = "fedavg"      # fedavg | fedprox | scaffold | fednova
+    rounds: int = 20
+    batch_size: int = 32
+    lr: float = 1e-3
+    prox_mu: float = 0.01          # fedprox proximal coefficient
+    scaffold_lr: float = 0.05      # scaffold local SGD lr
+    seed: int = 0
+
+
+class FedTrainer:
+    def __init__(self, cfg: ModelConfig, hp: FedHParams, clients):
+        self.cfg, self.hp, self.clients = cfg, hp, clients
+        self.n = len(clients)
+        self.global_params = lenet.init_params(
+            cfg, jax.random.PRNGKey(hp.seed))
+        self.meter = Meter()
+        self.history: List[Dict[str, Any]] = []
+        self._rng = np.random.default_rng(hp.seed)
+        if hp.algorithm == "scaffold":
+            self.c_global = tree_zeros_like(self.global_params)
+            self.c_local = [tree_zeros_like(self.global_params)
+                            for _ in range(self.n)]
+        self._compile()
+
+    # ------------------------------------------------------------------
+    def _compile(self):
+        cfg, hp = self.cfg, self.hp
+
+        def loss_fn(params, x, y, global_params):
+            logits, _ = lenet.forward(cfg, params, x)
+            l = cross_entropy(logits, y)
+            if hp.algorithm == "fedprox":
+                sq = sum(jnp.sum((a - b) ** 2) for a, b in zip(
+                    jax.tree.leaves(params),
+                    jax.tree.leaves(global_params)))
+                l = l + 0.5 * hp.prox_mu * sq
+            return l
+
+        grad_fn = jax.value_and_grad(loss_fn)
+
+        def adam_step(params, opt, x, y, global_params):
+            l, g = grad_fn(params, x, y, global_params)
+            params, opt = adam_update(params, g, opt, lr=hp.lr)
+            return params, opt, l
+
+        self._adam_step = jax.jit(adam_step)
+
+        def scaffold_step(params, x, y, c_g, c_i):
+            l, g = grad_fn(params, x, y, params)
+            g = jax.tree.map(lambda gg, cg, ci: gg - ci + cg, g, c_g, c_i)
+            params = jax.tree.map(lambda p, gg: p - hp.scaffold_lr * gg,
+                                  params, g)
+            return params, l
+
+        self._scaffold_step = jax.jit(scaffold_step)
+
+        def eval_fn(params, x, y):
+            logits, _ = lenet.forward(cfg, params, x)
+            return accuracy(logits, y)
+
+        self._eval = jax.jit(eval_fn)
+
+    # ------------------------------------------------------------------
+    def _local_epoch(self, i, params):
+        """One local epoch for client i; returns (params, steps, loss)."""
+        hp = self.hp
+        opt = adam_init(params)
+        steps, last = 0, 0.0
+        for x, y in batch_iterator(self.clients[i], hp.batch_size,
+                                   self._rng):
+            x, y = jnp.asarray(x), jnp.asarray(y)
+            if hp.algorithm == "scaffold":
+                params, l = self._scaffold_step(
+                    params, x, y, self.c_global, self.c_local[i])
+            else:
+                params, opt, l = self._adam_step(params, opt, x, y,
+                                                 self.global_params)
+            steps += 1
+            last = float(l)
+        return params, steps, last
+
+    def train(self, eval_every: int = 1):
+        cfg, hp = self.cfg, self.hp
+        fl = lenet_flops_per_example(cfg, "full")
+        model_bytes = tree_bytes(self.global_params)
+        for r in range(hp.rounds):
+            deltas, taus = [], []
+            new_c_locals = []
+            for i in range(self.n):
+                local, steps, _ = self._local_epoch(i, self.global_params)
+                deltas.append(tree_sub(local, self.global_params))
+                taus.append(max(steps, 1))
+                self.meter.add_client_flops(
+                    3 * fl * steps * hp.batch_size)
+                payload = 2 * model_bytes
+                if hp.algorithm == "scaffold":
+                    payload *= 2  # control variates travel too
+                    # control update (option II of the paper)
+                    coef = 1.0 / (max(steps, 1) * hp.scaffold_lr)
+                    ci_new = tree_add(
+                        tree_sub(self.c_local[i], self.c_global),
+                        tree_scale(deltas[-1], -coef), 1.0)
+                    new_c_locals.append((i, ci_new))
+                self.meter.add_payload(payload)
+
+            if hp.algorithm == "fednova":
+                # normalized averaging: d_i / tau_i, scaled by mean tau
+                tau_eff = float(np.mean(taus))
+                upd = tree_zeros_like(self.global_params)
+                for d, t in zip(deltas, taus):
+                    upd = tree_add(upd, d, tau_eff / (self.n * t))
+                self.global_params = tree_add(self.global_params, upd)
+            else:
+                upd = tree_zeros_like(self.global_params)
+                for d in deltas:
+                    upd = tree_add(upd, d, 1.0 / self.n)
+                self.global_params = tree_add(self.global_params, upd)
+
+            if hp.algorithm == "scaffold":
+                dc = tree_zeros_like(self.c_global)
+                for i, ci_new in new_c_locals:
+                    dc = tree_add(dc, tree_sub(ci_new, self.c_local[i]),
+                                  1.0 / self.n)
+                    self.c_local[i] = ci_new
+                self.c_global = tree_add(self.c_global, dc)
+
+            rec = {"round": r, **self.meter.summary()}
+            if (r + 1) % eval_every == 0 or r == hp.rounds - 1:
+                rec["accuracy"] = self.evaluate()
+            self.history.append(rec)
+        return self.history
+
+    # ------------------------------------------------------------------
+    def evaluate(self) -> float:
+        accs = [float(self._eval(self.global_params,
+                                 jnp.asarray(c.test_x),
+                                 jnp.asarray(c.test_y)))
+                for c in self.clients]
+        return 100.0 * float(np.mean(accs))
+
+    def c3(self, bandwidth_budget, compute_budget, temperature=8.0):
+        acc = (self.history[-1].get("accuracy") if self.history else None) \
+            or self.evaluate()
+        return c3_score(acc, self.meter.bandwidth_gb,
+                        self.meter.client_tflops,
+                        bandwidth_budget=bandwidth_budget,
+                        compute_budget=compute_budget,
+                        temperature=temperature)

@@ -1,0 +1,176 @@
+"""Split-learning baselines: SL-basic (Gupta & Raskar) and SplitFed.
+
+SL-basic: clients hold the bottom conv blocks, the server the rest.  In
+each round clients take turns (round-robin); every iteration sends the
+split activations + labels up and the activation gradient down, and the
+*client model weights* hop client->client between turns (the classical
+protocol's weight relay).  The server trains synchronously with the
+active client — the inefficiency AdaSplit removes.
+
+SplitFed: all clients run in parallel against the server each iteration
+(batched here), and a fed server averages the client models at round
+end (weights up+down per round, like FedAvg on the client half).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.accounting import (Meter, array_bytes,
+                                   lenet_flops_per_example)
+from repro.core.c3 import c3_score
+from repro.core.losses import accuracy, cross_entropy
+from repro.data.synthetic import batch_iterator
+from repro.models import lenet
+from repro.optim.adam import adam_init, adam_update
+from repro.utils.tree import tree_add, tree_bytes, tree_scale, tree_zeros_like
+
+
+@dataclass
+class SplitHParams:
+    algorithm: str = "sl-basic"    # sl-basic | splitfed
+    rounds: int = 20
+    batch_size: int = 32
+    lr: float = 1e-3
+    seed: int = 0
+
+
+class SplitTrainer:
+    def __init__(self, cfg: ModelConfig, hp: SplitHParams, clients):
+        self.cfg, self.hp, self.clients = cfg, hp, clients
+        self.n = len(clients)
+        key = jax.random.PRNGKey(hp.seed)
+        kc, ks = jax.random.split(key)
+        if hp.algorithm == "sl-basic":
+            # ONE client model relayed between clients
+            self.client_params = [lenet.init_client_params(cfg, kc)]
+        else:
+            self.client_params = [
+                lenet.init_client_params(cfg, jax.random.fold_in(kc, i))
+                for i in range(self.n)]
+        self.server_params = lenet.init_server_params(cfg, ks)
+        self.c_opts = [adam_init(p) for p in self.client_params]
+        self.s_opt = adam_init(self.server_params)
+        self.meter = Meter()
+        self.history: List[Dict[str, Any]] = []
+        self._rng = np.random.default_rng(hp.seed)
+        self._compile()
+
+    # ------------------------------------------------------------------
+    def _compile(self):
+        cfg, hp = self.cfg, self.hp
+
+        def joint_loss(cp, sp, x, y):
+            acts = lenet.client_forward(cfg, cp, x)
+            logits, _ = lenet.server_forward(cfg, sp, acts)
+            return cross_entropy(logits, y)
+
+        def step(cp, c_opt, sp, s_opt, x, y):
+            """Full split-learning iteration: server computes the loss,
+            gradients flow server->client (the P_si payload)."""
+            l, (gc, gs) = jax.value_and_grad(joint_loss, argnums=(0, 1))(
+                cp, sp, x, y)
+            cp, c_opt = adam_update(cp, gc, c_opt, lr=hp.lr)
+            sp, s_opt = adam_update(sp, gs, s_opt, lr=hp.lr)
+            return cp, c_opt, sp, s_opt, l
+
+        self._step = jax.jit(step)
+
+        def acts_shape(x):
+            return jax.eval_shape(
+                lambda xx: lenet.client_forward(cfg, self.client_params[0],
+                                                xx), x)
+
+        self._acts_shape = acts_shape
+
+        def eval_fn(cp, sp, x, y):
+            acts = lenet.client_forward(cfg, cp, x)
+            logits, _ = lenet.server_forward(cfg, sp, acts)
+            return accuracy(logits, y)
+
+        self._eval = jax.jit(eval_fn)
+
+    # ------------------------------------------------------------------
+    def train(self, eval_every: int = 1):
+        cfg, hp = self.cfg, self.hp
+        fl_c = lenet_flops_per_example(cfg, "client")
+        fl_s = lenet_flops_per_example(cfg, "server")
+        relay_bytes = tree_bytes(self.client_params[0])
+
+        for r in range(hp.rounds):
+            if hp.algorithm == "sl-basic":
+                # round-robin: one relayed client model
+                for i in range(self.n):
+                    cp, c_opt = self.client_params[0], self.c_opts[0]
+                    for x, y in batch_iterator(self.clients[i],
+                                               hp.batch_size, self._rng):
+                        x, y = jnp.asarray(x), jnp.asarray(y)
+                        cp, c_opt, self.server_params, self.s_opt, _ = \
+                            self._step(cp, c_opt, self.server_params,
+                                       self.s_opt, x, y)
+                        a_sh = self._acts_shape(x)
+                        up = array_bytes(a_sh.shape, 4) \
+                            + array_bytes((x.shape[0],), 4)
+                        down = array_bytes(a_sh.shape, 4)  # grad to client
+                        self.meter.add_payload(up + down)
+                        self.meter.add_client_flops(3 * fl_c * x.shape[0])
+                        self.meter.add_server_flops(3 * fl_s * x.shape[0])
+                    self.client_params[0], self.c_opts[0] = cp, c_opt
+                    # weight relay to the next client
+                    self.meter.add_payload(relay_bytes)
+            else:  # splitfed: clients in parallel each iteration
+                iters = [list(batch_iterator(self.clients[i],
+                                             hp.batch_size, self._rng))
+                         for i in range(self.n)]
+                T = min(len(it) for it in iters)
+                for t in range(T):
+                    for i in range(self.n):
+                        x, y = iters[i][t]
+                        x, y = jnp.asarray(x), jnp.asarray(y)
+                        (self.client_params[i], self.c_opts[i],
+                         self.server_params, self.s_opt, _) = self._step(
+                            self.client_params[i], self.c_opts[i],
+                            self.server_params, self.s_opt, x, y)
+                        a_sh = self._acts_shape(x)
+                        self.meter.add_payload(
+                            2 * array_bytes(a_sh.shape, 4)
+                            + array_bytes((x.shape[0],), 4))
+                        self.meter.add_client_flops(3 * fl_c * x.shape[0])
+                        self.meter.add_server_flops(3 * fl_s * x.shape[0])
+                # fed-average the client models (weights up + down)
+                avg = tree_zeros_like(self.client_params[0])
+                for p in self.client_params:
+                    avg = tree_add(avg, p, 1.0 / self.n)
+                self.client_params = [avg] * self.n
+                self.meter.add_payload(2 * relay_bytes * self.n)
+
+            rec = {"round": r, **self.meter.summary()}
+            if (r + 1) % eval_every == 0 or r == hp.rounds - 1:
+                rec["accuracy"] = self.evaluate()
+            self.history.append(rec)
+        return self.history
+
+    # ------------------------------------------------------------------
+    def evaluate(self) -> float:
+        accs = []
+        for i, c in enumerate(self.clients):
+            cp = self.client_params[0] if self.hp.algorithm == "sl-basic" \
+                else self.client_params[i]
+            accs.append(float(self._eval(cp, self.server_params,
+                                         jnp.asarray(c.test_x),
+                                         jnp.asarray(c.test_y))))
+        return 100.0 * float(np.mean(accs))
+
+    def c3(self, bandwidth_budget, compute_budget, temperature=8.0):
+        acc = (self.history[-1].get("accuracy") if self.history else None) \
+            or self.evaluate()
+        return c3_score(acc, self.meter.bandwidth_gb,
+                        self.meter.client_tflops,
+                        bandwidth_budget=bandwidth_budget,
+                        compute_budget=compute_budget,
+                        temperature=temperature)

@@ -1,0 +1,59 @@
+"""Checkpoint IO: pytree <-> npz with path-flattened keys + msgpack
+metadata sidecar.  Round-trip tested, handles bf16 via uint16 view.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(path: str, tree, metadata: Optional[dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        a = np.asarray(v)
+        if a.dtype == jnp.bfloat16:
+            dtypes[k] = "bfloat16"
+            a = a.view(np.uint16)
+        else:
+            dtypes[k] = str(a.dtype)
+        arrays[k] = a
+    np.savez(path + ".npz", **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(path + ".meta", "wb") as f:
+        f.write(msgpack.packb({"treedef": str(treedef),
+                               "dtypes": dtypes,
+                               "metadata": metadata or {}}))
+
+
+def restore_checkpoint(path: str, like) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like``.  Returns (tree, metadata)."""
+    data = np.load(path + ".npz")
+    with open(path + ".meta", "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    flat_like = _flatten(like)
+    restored = {}
+    for k in flat_like:
+        a = data[k]
+        if meta["dtypes"].get(k) == "bfloat16":
+            a = a.view(jnp.bfloat16)
+        restored[k] = jnp.asarray(a)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten(like).keys())
+    new_leaves = [restored[k] for k in keys]
+    return treedef.unflatten(new_leaves), meta["metadata"]

@@ -1,0 +1,24 @@
+"""Qwen2-VL-72B — VLM backbone: M-RoPE, dynamic resolution.
+[arXiv:2409.12191]  Vision encoder is a STUB per the assignment carve-out:
+input_specs() provides precomputed patch embeddings.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    source="arXiv:2409.12191",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=29_568,
+    vocab_size=152_064,
+    qkv_bias=True,
+    mrope_sections=(16, 24, 24),   # t/h/w sections of the half-dim (64)
+    rope_theta=1_000_000.0,
+    modality="vision_text",
+    frontend_frames=1024,          # patch embeddings per sequence (stub)
+    norm="rms",
+))

@@ -1,0 +1,126 @@
+"""Resource accounting — the paper's C1 (compute, eq. 1) and C2
+(communication, eq. 2) meters.
+
+Bandwidth counts actual payload bytes crossing the client<->server
+boundary (activations + labels up, gradients down when applicable;
+model weights for FL).  Sparse payloads (activation-sparsified AdaSplit,
+Table 6) are counted as nnz * (value + index) bytes.
+
+Compute uses analytic FLOP models (matmul-dominated): forward = 2*W*n,
+backward = 2x forward.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def array_bytes(shape, dtype_bytes=4, nnz_fraction: Optional[float] = None
+                ) -> int:
+    n = int(np.prod(shape))
+    if nnz_fraction is None:
+        return n * dtype_bytes
+    nnz = int(n * nnz_fraction)
+    return nnz * (dtype_bytes + 4)  # value + int32 index
+
+
+# ---------------------------------------------------------------------------
+# FLOP models
+# ---------------------------------------------------------------------------
+
+
+def lenet_flops_per_example(cfg: ModelConfig, part: str = "full") -> float:
+    """Forward FLOPs for one 32x32x3 example through conv blocks + FC."""
+    from repro.models.lenet import split_index
+    s = split_index(cfg)
+    hw = cfg.image_size
+    cin = 3
+    fl_client = fl_server = 0.0
+    for i, c in enumerate(cfg.conv_channels):
+        f = 2 * hw * hw * 25 * cin * c  # 5x5 conv
+        if i < s:
+            fl_client += f
+        else:
+            fl_server += f
+        cin = c
+        hw //= 2
+    flat = max(hw, 1) ** 2 * cfg.conv_channels[-1]
+    fl_server += 2 * (flat * 120 + 120 * cfg.d_model
+                      + cfg.d_model * cfg.n_classes)
+    return {"client": fl_client, "server": fl_server,
+            "full": fl_client + fl_server}[part]
+
+
+def transformer_matmul_params(cfg: ModelConfig, part: str = "full") -> float:
+    """Matmul weights touched per token (active experts only)."""
+    full = cfg.active_param_count()
+    emb = cfg.padded_vocab() * cfg.d_model
+    body = full - 2 * emb if not cfg.is_conv else full
+    n = cfg.n_encoder_layers if cfg.is_encoder_decoder else cfg.n_layers
+    frac_client = cfg.split_layer / max(n, 1)
+    if cfg.is_encoder_decoder:
+        # client fraction applies to the encoder half only
+        frac_client *= 0.5
+    cl = body * frac_client
+    sv = body - cl + emb  # head matmul is server-side
+    return {"client": cl, "server": sv, "full": cl + sv}[part]
+
+
+def transformer_flops_per_token(cfg: ModelConfig, part: str = "full",
+                                seq_len: int = 0) -> float:
+    f = 2.0 * transformer_matmul_params(cfg, part)
+    if seq_len and not cfg.is_conv:
+        # attention score/value term, split by layer ownership
+        n_attn = sum(1 for i in range(cfg.n_layers) if
+                     (cfg.n_heads and cfg.is_attn_layer(i)))
+        att = 4.0 * seq_len * cfg.n_heads * cfg.head_dim * n_attn
+        if part == "client":
+            att *= cfg.split_layer / max(cfg.n_layers, 1)
+        elif part == "server":
+            att *= 1 - cfg.split_layer / max(cfg.n_layers, 1)
+        f += att
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Meter
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Meter:
+    bandwidth_bytes: float = 0.0
+    client_flops: float = 0.0
+    server_flops: float = 0.0
+
+    def add_payload(self, nbytes: float):
+        self.bandwidth_bytes += nbytes
+
+    def add_client_flops(self, f: float):
+        self.client_flops += f
+
+    def add_server_flops(self, f: float):
+        self.server_flops += f
+
+    @property
+    def bandwidth_gb(self) -> float:
+        return self.bandwidth_bytes / 1e9
+
+    @property
+    def client_tflops(self) -> float:
+        return self.client_flops / 1e12
+
+    @property
+    def total_tflops(self) -> float:
+        return (self.client_flops + self.server_flops) / 1e12
+
+    def summary(self) -> dict:
+        return {
+            "bandwidth_gb": self.bandwidth_gb,
+            "client_tflops": self.client_tflops,
+            "total_tflops": self.total_tflops,
+        }

@@ -1,0 +1,308 @@
+"""The AdaSplit training protocol (paper §3) — classification form, as
+benchmarked in the paper (LeNet backbone, N clients, R rounds).
+
+Faithful elements:
+  * two-phase schedule: local phase for the first kappa*R rounds (zero
+    client<->server traffic), then the global phase;
+  * client models train ONLY with the local supervised NT-Xent loss
+    (eq. 5) — no server gradient (P_si = 0) unless the Table-5 ablation
+    flag ``server_grad_to_client`` is set;
+  * UCB orchestrator (eq. 6) selects eta*N clients per global iteration;
+  * server trains with CE + lambda*L1(m_i), each client updating only
+    its masked partition of M^s (eq. 7-8) — per-scalar masks (paper) or
+    structured per-unit masks (scale adaptation, DESIGN.md §3);
+  * bandwidth / compute metering per eq. 1-2, C3-Score at the end.
+
+The LM/pod-scale variant of the same protocol lives in
+``repro.launch.train`` (batched cohorts on the device mesh).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import masks as masks_mod
+from repro.core.accounting import Meter, array_bytes, lenet_flops_per_example
+from repro.core.c3 import c3_score
+from repro.core.losses import (accuracy, cross_entropy, l1_penalty,
+                               ntxent_supervised)
+from repro.core.orchestrator import Orchestrator
+from repro.models import lenet
+from repro.optim.adam import adam_init, adam_update
+
+
+@dataclass
+class AdaSplitHParams:
+    rounds: int = 20
+    kappa: float = 0.6          # local-phase fraction
+    eta: float = 0.6            # selected-client fraction
+    gamma: float = 0.87         # UCB discount
+    lam: float = 1e-5           # mask L1 coefficient
+    tau: float = 0.07           # NT-Xent temperature
+    lr: float = 1e-3
+    batch_size: int = 32
+    proj_dim: int = 64
+    mask_mode: str = "per_unit"     # "per_unit" | "per_scalar"
+    act_l1: float = 0.0             # beta: split-activation sparsification
+    act_threshold: float = 1e-3     # payload nnz threshold
+    server_grad_to_client: bool = False  # Table-5 ablation
+    seed: int = 0
+
+
+def _proj_init(key, in_dim, proj_dim):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (in_dim, 128)) * (1 / np.sqrt(in_dim)),
+            "b1": jnp.zeros((128,)),
+            "w2": jax.random.normal(k2, (128, proj_dim)) * (1 / np.sqrt(128))}
+
+
+def _proj_apply(p, acts):
+    h = acts.reshape(acts.shape[0], -1).astype(jnp.float32)
+    h = jax.nn.relu(h @ p["w1"] + p["b1"])
+    return h @ p["w2"]
+
+
+class AdaSplitTrainer:
+    def __init__(self, cfg: ModelConfig, hp: AdaSplitHParams, clients):
+        self.cfg, self.hp, self.clients = cfg, hp, clients
+        self.n = len(clients)
+        key = jax.random.PRNGKey(hp.seed)
+        kc, ks, kp = jax.random.split(key, 3)
+
+        # per-client models (stacked leading C) + projection heads
+        cps = [lenet.init_client_params(cfg, jax.random.fold_in(kc, i))
+               for i in range(self.n)]
+        self.client_params = jax.tree.map(lambda *x: jnp.stack(x), *cps)
+        acts_dim = self._acts_dim()
+        pps = [_proj_init(jax.random.fold_in(kp, i), acts_dim, hp.proj_dim)
+               for i in range(self.n)]
+        self.proj_params = jax.tree.map(lambda *x: jnp.stack(x), *pps)
+        self.server_params = lenet.init_server_params(cfg, ks)
+
+        if hp.mask_mode == "per_scalar":
+            self.masks = masks_mod.init_scalar_masks(self.server_params,
+                                                     self.n)
+        else:
+            self.masks = masks_mod.init_lenet_unit_masks(cfg, self.n)
+
+        # per-client Adam states carry a per-client step vector so they can
+        # be sliced/vmapped uniformly
+        self.c_opt = adam_init({"c": self.client_params,
+                                "p": self.proj_params})
+        self.c_opt["step"] = jnp.zeros((self.n,), jnp.int32)
+        self.s_opt = adam_init(self.server_params)
+        self.m_opt = adam_init(self.masks)
+        self.m_opt["step"] = jnp.zeros((self.n,), jnp.int32)
+
+        self.orch = Orchestrator(self.n, hp.eta, hp.gamma, seed=hp.seed)
+        self.meter = Meter()
+        self.history: List[Dict[str, Any]] = []
+        self._rng = np.random.default_rng(hp.seed)
+        self._compile()
+
+    # ------------------------------------------------------------------
+    def _acts_dim(self):
+        x = jnp.zeros((1, self.cfg.image_size, self.cfg.image_size, 3))
+        cp = lenet.init_client_params(self.cfg, jax.random.PRNGKey(0))
+        a = lenet.client_forward(self.cfg, cp, x)
+        return int(np.prod(a.shape[1:]))
+
+    def _compile(self):
+        cfg, hp = self.cfg, self.hp
+
+        def client_loss(cp_pp, x, y):
+            acts = lenet.client_forward(cfg, cp_pp["c"], x)
+            q = _proj_apply(cp_pp["p"], acts)
+            loss = ntxent_supervised(q, y, hp.tau)
+            if hp.act_l1:
+                loss = loss + hp.act_l1 * jnp.sum(jnp.abs(acts)) / acts.shape[0]
+            return loss, acts
+
+        def client_step(cp_pp, opt, x, y):
+            (loss, acts), g = jax.value_and_grad(client_loss, has_aux=True)(
+                cp_pp, x, y)
+            new, opt = adam_update(cp_pp, g, opt, lr=hp.lr)
+            return new, opt, loss, acts
+
+        # vmapped across clients (each on its own batch) — Adam state has a
+        # shared scalar step; vmap over it too (stacked below).
+        self._client_step = jax.jit(jax.vmap(client_step))
+
+        def server_loss(sp, mask_i, acts, y):
+            if hp.mask_mode == "per_scalar":
+                eff = masks_mod.apply_scalar_masks(sp, mask_i)
+                logits, _ = lenet.server_forward(cfg, eff, acts)
+            else:
+                logits, _ = lenet.server_forward(cfg, sp, acts,
+                                                 gates=mask_i)
+            loss = cross_entropy(logits, y)
+            return loss + hp.lam * l1_penalty(mask_i) * mask_sz, loss
+
+        mask_sz = 1.0  # l1_penalty is already mean-normalised
+
+        def server_step(sp, s_opt, mask_i, m_opt_i, acts, y):
+            (total, ce), g = jax.value_and_grad(server_loss, argnums=(0, 1),
+                                                has_aux=True)(sp, mask_i,
+                                                              acts, y)
+            sp, s_opt = adam_update(sp, g[0], s_opt, lr=hp.lr)
+            mask_i, m_opt_i = adam_update(mask_i, g[1], m_opt_i, lr=hp.lr)
+            return sp, s_opt, mask_i, m_opt_i, ce
+
+        self._server_step = jax.jit(server_step)
+
+        def joint_step(cp_pp, c_opt_i, sp, s_opt, mask_i, m_opt_i, x, y):
+            """Table-5 ablation: client also receives the server CE grad."""
+            def loss_fn(cp_pp, sp, mask_i):
+                acts = lenet.client_forward(cfg, cp_pp["c"], x)
+                q = _proj_apply(cp_pp["p"], acts)
+                lc = ntxent_supervised(q, y, hp.tau)
+                if hp.mask_mode == "per_scalar":
+                    eff = masks_mod.apply_scalar_masks(sp, mask_i)
+                    logits, _ = lenet.server_forward(cfg, eff, acts)
+                else:
+                    logits, _ = lenet.server_forward(cfg, sp, acts,
+                                                     gates=mask_i)
+                ce = cross_entropy(logits, y)
+                return lc + ce + hp.lam * l1_penalty(mask_i), ce
+            (_, ce), g = jax.value_and_grad(loss_fn, argnums=(0, 1, 2),
+                                            has_aux=True)(cp_pp, sp, mask_i)
+            cp_pp, c_opt_i = adam_update(cp_pp, g[0], c_opt_i, lr=hp.lr)
+            sp, s_opt = adam_update(sp, g[1], s_opt, lr=hp.lr)
+            mask_i, m_opt_i = adam_update(mask_i, g[2], m_opt_i, lr=hp.lr)
+            return cp_pp, c_opt_i, sp, s_opt, mask_i, m_opt_i, ce
+
+        self._joint_step = jax.jit(joint_step)
+
+        def eval_client(cp, pp_unused, sp, mask_i, x, y):
+            acts = lenet.client_forward(cfg, cp, x)
+            if hp.mask_mode == "per_scalar":
+                eff = masks_mod.apply_scalar_masks(sp, mask_i)
+                logits, _ = lenet.server_forward(cfg, eff, acts)
+            else:
+                logits, _ = lenet.server_forward(cfg, sp, acts, gates=mask_i)
+            return accuracy(logits, y)
+
+        self._eval_client = jax.jit(eval_client)
+
+    # ------------------------------------------------------------------
+    def _client_slice(self, tree, i):
+        return jax.tree.map(lambda l: l[i], tree)
+
+    def _set_client_slice(self, tree, i, new):
+        return jax.tree.map(lambda l, n: l.at[i].set(n), tree, new)
+
+    def _payload_bytes(self, acts_shape, batch):
+        nnz = None
+        if self.hp.act_l1:
+            nnz = self._last_nnz_fraction
+        up = array_bytes(acts_shape, 4, nnz) + array_bytes((batch,), 4)
+        down = 0
+        if self.hp.server_grad_to_client:
+            down = array_bytes(acts_shape, 4)
+        return up + down
+
+    # ------------------------------------------------------------------
+    def train(self, log_every: int = 1, eval_every: int = 1):
+        hp, cfg = self.hp, self.cfg
+        local_rounds = int(round(hp.kappa * hp.rounds))
+        fl_c = lenet_flops_per_example(cfg, "client")
+        fl_s = lenet_flops_per_example(cfg, "server")
+        self._last_nnz_fraction = 1.0
+
+        for r in range(hp.rounds):
+            global_phase = r >= local_rounds
+            self.orch.new_round()
+            iters = [list(self._epoch_batches(i)) for i in range(self.n)]
+            T = min(len(it) for it in iters)
+            for t in range(T):
+                xs = np.stack([iters[i][t][0] for i in range(self.n)])
+                ys = np.stack([iters[i][t][1] for i in range(self.n)])
+                cp_pp = {"c": self.client_params, "p": self.proj_params}
+                new, self.c_opt, closs, acts = self._client_step(
+                    cp_pp, self.c_opt, jnp.asarray(xs), jnp.asarray(ys))
+                self.client_params, self.proj_params = new["c"], new["p"]
+                # 3x forward FLOPs for fwd+bwd
+                self.meter.add_client_flops(3 * fl_c * self.n * hp.batch_size)
+
+                if not global_phase:
+                    continue
+                selected = self.orch.select()
+                losses = []
+                for i in selected:
+                    a_i = acts[i]
+                    if hp.act_l1:
+                        frac = float(jnp.mean(
+                            (jnp.abs(a_i) > hp.act_threshold)))
+                        self._last_nnz_fraction = frac
+                        a_i = jnp.where(jnp.abs(a_i) > hp.act_threshold,
+                                        a_i, 0)
+                    mask_i = self._client_slice(self.masks, i)
+                    mopt_i = self._client_slice(self.m_opt, i)
+                    if hp.server_grad_to_client:
+                        cp_i = self._client_slice(
+                            {"c": self.client_params, "p": self.proj_params},
+                            i)
+                        copt_i = self._client_slice(self.c_opt, i)
+                        (cp_i, copt_i, self.server_params, self.s_opt,
+                         mask_i, mopt_i, ce) = self._joint_step(
+                            cp_i, copt_i, self.server_params, self.s_opt,
+                            mask_i, mopt_i, jnp.asarray(xs[i]),
+                            jnp.asarray(ys[i]))
+                        self.client_params = self._set_client_slice(
+                            self.client_params, i, cp_i["c"])
+                        self.proj_params = self._set_client_slice(
+                            self.proj_params, i, cp_i["p"])
+                        self.c_opt = self._set_client_slice(self.c_opt, i,
+                                                            copt_i)
+                    else:
+                        (self.server_params, self.s_opt, mask_i, mopt_i,
+                         ce) = self._server_step(
+                            self.server_params, self.s_opt, mask_i, mopt_i,
+                            a_i, jnp.asarray(ys[i]))
+                    self.masks = self._set_client_slice(self.masks, i,
+                                                        mask_i)
+                    self.m_opt = self._set_client_slice(self.m_opt, i,
+                                                        mopt_i)
+                    losses.append(float(ce))
+                    self.meter.add_payload(
+                        self._payload_bytes(a_i.shape, hp.batch_size))
+                    self.meter.add_server_flops(3 * fl_s * hp.batch_size)
+                self.orch.update(selected, losses)
+
+            rec = {"round": r, "phase": "global" if global_phase else "local",
+                   **self.meter.summary()}
+            if (r + 1) % eval_every == 0 or r == hp.rounds - 1:
+                rec["accuracy"] = self.evaluate()
+            self.history.append(rec)
+        return self.history
+
+    # ------------------------------------------------------------------
+    def _epoch_batches(self, i):
+        from repro.data.synthetic import batch_iterator
+        return batch_iterator(self.clients[i], self.hp.batch_size, self._rng)
+
+    # ------------------------------------------------------------------
+    def evaluate(self) -> float:
+        accs = []
+        for i, cd in enumerate(self.clients):
+            cp = self._client_slice(self.client_params, i)
+            mask_i = self._client_slice(self.masks, i)
+            acc = self._eval_client(cp, None, self.server_params, mask_i,
+                                    jnp.asarray(cd.test_x),
+                                    jnp.asarray(cd.test_y))
+            accs.append(float(acc))
+        return 100.0 * float(np.mean(accs))
+
+    def c3(self, bandwidth_budget, compute_budget, temperature=8.0):
+        acc = self.history[-1].get("accuracy") or self.evaluate()
+        return c3_score(acc, self.meter.bandwidth_gb,
+                        self.meter.client_tflops,
+                        bandwidth_budget=bandwidth_budget,
+                        compute_budget=compute_budget,
+                        temperature=temperature)

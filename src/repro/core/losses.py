@@ -1,0 +1,103 @@
+"""Losses: supervised NT-Xent (AdaSplit eq. 5), cross-entropy, L1.
+
+The NT-Xent here is the pure-jnp formulation; the Pallas kernel in
+``repro.kernels.ntxent`` implements the same math blocked for VMEM and is
+validated against ``ntxent_supervised`` in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ntxent_supervised(q, labels, tau: float = 0.07, normalize: bool = True):
+    """Supervised NT-Xent (eq. 5).
+
+    q: (B, D) projections; labels: (B,) int.  Positives = same label,
+    j != i.  Returns mean over positive pairs (batch-size invariant form;
+    the paper's plain sum differs by a constant factor).
+    """
+    q = q.astype(jnp.float32)
+    if normalize:
+        q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-8)
+    B = q.shape[0]
+    sim = (q @ q.T) / tau                                  # (B, B)
+    eye = jnp.eye(B, dtype=bool)
+    sim = jnp.where(eye, -jnp.inf, sim)
+    lse = jax.nn.logsumexp(sim, axis=-1)                   # (B,)
+    pos = (labels[:, None] == labels[None, :]) & ~eye      # (B, B)
+    per_pair = -(sim - lse[:, None])                       # -log softmax
+    n_pos = jnp.maximum(jnp.sum(pos), 1)
+    return jnp.sum(jnp.where(pos, per_pair, 0.0)) / n_pos
+
+
+def cross_entropy(logits, targets, weights=None):
+    """Token/classification CE.  logits (..., V); targets (...,) int.
+
+    weights: optional per-position weights (selection / padding mask).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if weights is not None:
+        w = weights.astype(jnp.float32)
+        return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1e-8)
+    return jnp.mean(nll)
+
+
+def chunked_cross_entropy(hidden, table, labels, vocab_size: int,
+                          chunk: int = 512, weights=None):
+    """Token CE without materialising (B, S, Vpad) logits.
+
+    hidden: (B, S, D) final hidden states; table: (Vpad, D) lm_head;
+    labels: (B, S) int32; weights: optional (B, S) per-token weights
+    (AdaSplit cohort selection / padding).  Scans over sequence chunks;
+    each chunk's logits are rematerialised in the backward pass
+    (jax.checkpoint), so peak memory is one (B, chunk, Vpad) block.
+    Padded vocab rows are excluded from the logsumexp by a -1e9 bias.
+    """
+    B, S, D = hidden.shape
+    Vp = table.shape[0]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    pad_bias = jnp.where(jnp.arange(Vp) < vocab_size, 0.0, -1e9)
+    if weights is None:
+        weights = jnp.ones((B, S), jnp.float32)
+
+    @jax.checkpoint
+    def one_chunk(h, y, w):
+        # h: (B, chunk, D), y/w: (B, chunk)
+        logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
+                            table.astype(jnp.float32)) + pad_bias
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * w.astype(jnp.float32))
+
+    def body(tot, xs):
+        return tot + one_chunk(*xs), None
+
+    hs = hidden.reshape(B, nc, chunk, D).swapaxes(0, 1)
+    ys = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+    ws = weights.reshape(B, nc, chunk).swapaxes(0, 1)
+    if nc == 1:
+        total = one_chunk(hs[0], ys[0], ws[0])
+    else:
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                (hs, ys, ws))
+    return total / jnp.maximum(jnp.sum(weights), 1e-8)
+
+
+def l1_penalty(tree):
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    total = sum(jnp.sum(jnp.abs(x.astype(jnp.float32))) for x in leaves)
+    n = sum(x.size for x in leaves)
+    return total / n  # mean-|.| so lambda is scale-free across mask sizes
+
+
+def accuracy(logits, targets):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32))

@@ -1,0 +1,178 @@
+"""AdaSplit per-client server masks (§3.3, eq. 7-8).
+
+Two granularities (DESIGN.md §3):
+
+* ``per_scalar`` — paper-faithful: one mask value per server parameter.
+  Applied by transforming params before the forward
+  (``apply_scalar_masks``), so grads are masked by the chain rule —
+  exactly eq. 7 — and masks receive CE gradient.  Used at LeNet scale.
+
+* ``per_unit`` — structured: one mask value per output unit (attention
+  head / MLP hidden unit / expert / mamba channel).  Applied in
+  activation space (mathematically identical to masking weight rows),
+  O(sum d_out) per client, MXU-friendly.  Used for the LLM archs.
+
+Mask leaves are continuous, init 1.0, driven sparse by the L1 term in
+``L_server`` (core/losses.l1_penalty); ``binarize`` thresholds them for
+inference, and ``sparsity`` reports the achieved fraction of zeros.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import Segment, model_plan
+
+
+# ---------------------------------------------------------------------------
+# per-unit masks (transformer zoo)
+# ---------------------------------------------------------------------------
+
+
+def _seg_unit_masks(cfg: ModelConfig, seg: Segment, n_clients: int):
+    def one(desc):
+        m: Dict[str, Any] = {}
+        if desc.mixer == "attn":
+            m["mixer"] = jnp.ones((n_clients, seg.n_rep, cfg.n_heads))
+        else:
+            m["mixer"] = jnp.ones((n_clients, seg.n_rep, cfg.d_inner))
+        if desc.ffn == "dense":
+            m["ffn"] = jnp.ones((n_clients, seg.n_rep, cfg.d_ff))
+        elif desc.ffn == "moe":
+            m["ffn"] = jnp.ones((n_clients, seg.n_rep, cfg.n_experts))
+        return m
+    return {str(j): one(d) for j, d in enumerate(seg.body)}
+
+
+def init_unit_masks(cfg: ModelConfig, n_clients: int) -> List[Any]:
+    """One entry per server segment (decoder segments for enc-dec)."""
+    plan = model_plan(cfg)
+    segs = plan["server_dec_segments"] if cfg.is_encoder_decoder \
+        else plan["server_segments"]
+    return [_seg_unit_masks(cfg, s, n_clients) for s in segs]
+
+
+def expand_gates(masks: List[Any], client_ids):
+    """Per-example gates: leaves (C, n_rep, U) -> (n_rep, B, U)."""
+    def ex(leaf):
+        return jnp.swapaxes(leaf[client_ids], 0, 1)
+    return [jax.tree.map(ex, seg) for seg in masks]
+
+
+def gates_for_client(masks: List[Any], client: int):
+    """Single-client gates: leaves (n_rep, U)."""
+    return [jax.tree.map(lambda l: l[client], seg) for seg in masks]
+
+
+# ---------------------------------------------------------------------------
+# LeNet unit masks
+# ---------------------------------------------------------------------------
+
+
+def init_lenet_unit_masks(cfg: ModelConfig, n_clients: int):
+    from repro.models.lenet import split_index
+    s = split_index(cfg)
+    return {
+        "blocks": [jnp.ones((n_clients, c)) for c in cfg.conv_channels[s:]],
+        "fc1": jnp.ones((n_clients, 120)),
+        "fc2": jnp.ones((n_clients, cfg.d_model)),
+    }
+
+
+def lenet_gates_for_client(masks, client: int):
+    return jax.tree.map(lambda l: l[client], masks)
+
+
+# ---------------------------------------------------------------------------
+# per-scalar masks (paper-faithful)
+# ---------------------------------------------------------------------------
+
+
+def init_scalar_masks(server_params, n_clients: int):
+    return jax.tree.map(
+        lambda p: jnp.ones((n_clients,) + p.shape, p.dtype), server_params)
+
+
+def scalar_mask_for_client(masks, client: int):
+    return jax.tree.map(lambda m: m[client], masks)
+
+
+def apply_scalar_masks(server_params, mask):
+    """Effective server model M^s * m_i (paper eq. 7 via chain rule)."""
+    return jax.tree.map(lambda p, m: p * m.astype(p.dtype),
+                        server_params, mask)
+
+
+# ---------------------------------------------------------------------------
+# mask folding (serving): M^s * m_i materialised once per session
+# ---------------------------------------------------------------------------
+
+
+def fold_unit_masks(cfg: ModelConfig, server_params, masks, client: int,
+                    *, threshold: float = 0.0):
+    """Fold client ``client``'s per-unit masks into the server weights.
+
+    Equivalent to applying the activation-space gates at every step
+    (gating a unit's output == scaling the rows of the following
+    projection), but paid ONCE per serving session instead of per token
+    (DESIGN.md §4, ``--fold-mask``).  threshold > 0 binarises first.
+    """
+    gates = gates_for_client(masks, client)
+    if threshold > 0:
+        gates = binarize(gates, threshold)
+    plan = model_plan(cfg)
+    segs = plan["server_dec_segments"] if cfg.is_encoder_decoder \
+        else plan["server_segments"]
+    new_segments = []
+    for seg, sp, gs in zip(segs, server_params["segments"], gates):
+        sp = jax.tree.map(lambda x: x, sp)  # shallow copy
+        for j, desc in enumerate(seg.body):
+            layer = dict(sp[j])
+            g = gs[str(j)]
+            if "mixer" in g and g["mixer"] is not None:
+                gm = g["mixer"]  # (n_rep, H) attn or (n_rep, din) ssm
+                mixer = dict(layer["mixer"])
+                if desc.mixer == "attn":
+                    hd = cfg.head_dim
+                    rows = jnp.repeat(gm, hd, axis=-1)  # (n_rep, H*hd)
+                    mixer["wo"] = mixer["wo"] * rows[..., None].astype(
+                        mixer["wo"].dtype)
+                else:
+                    mixer["out_proj"] = mixer["out_proj"] \
+                        * gm[..., None].astype(mixer["out_proj"].dtype)
+                layer["mixer"] = mixer
+            if "ffn" in g and g["ffn"] is not None and "ffn" in layer:
+                gf = g["ffn"]
+                ffn = dict(layer["ffn"])
+                if desc.ffn == "moe":     # (n_rep, E) -> scale expert out
+                    ffn["w_down"] = ffn["w_down"] \
+                        * gf[..., None, None].astype(ffn["w_down"].dtype)
+                else:                     # (n_rep, F) -> w_down rows
+                    ffn["w_down"] = ffn["w_down"] \
+                        * gf[..., None].astype(ffn["w_down"].dtype)
+                layer["ffn"] = ffn
+            sp[j] = layer
+        new_segments.append(sp)
+    out = dict(server_params)
+    out["segments"] = new_segments
+    return out
+
+
+# ---------------------------------------------------------------------------
+# shared utilities
+# ---------------------------------------------------------------------------
+
+
+def binarize(masks, threshold: float = 0.05):
+    return jax.tree.map(
+        lambda m: (jnp.abs(m) > threshold).astype(m.dtype), masks)
+
+
+def sparsity(masks, threshold: float = 0.05) -> float:
+    leaves = jax.tree.leaves(masks)
+    zero = sum(float(jnp.sum(jnp.abs(m) <= threshold)) for m in leaves)
+    tot = sum(m.size for m in leaves)
+    return zero / max(tot, 1)

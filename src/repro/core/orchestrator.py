@@ -1,0 +1,67 @@
+"""UCB client-selection orchestrator (AdaSplit §3.2, eq. 6).
+
+Host-side control plane: O(N) scalar math per iteration, never enters
+the compiled graph — matching a real deployment where the coordinator
+process owns selection.
+
+A_i = l_i / s_i + sqrt(2 log T / s_i)
+  l_i = sum_t gamma^(T-1-t) * L_i^t     (discounted server losses)
+  s_i = sum_t gamma^(T-1-t) * S_i^t     (discounted selection flags)
+
+Unselected clients decay their loss estimate:
+  L_i^t = (L_i^{t-1} + L_i^{t-2}) / 2,  with L_i init to 100 at t=0,1.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+class Orchestrator:
+    def __init__(self, n_clients: int, eta: float, gamma: float = 0.87,
+                 init_loss: float = 100.0, seed: int = 0):
+        self.n = n_clients
+        self.k = max(1, int(round(eta * n_clients)))
+        self.gamma = float(gamma)
+        self.L: List[List[float]] = [[init_loss, init_loss]
+                                     for _ in range(n_clients)]
+        self.S: List[List[float]] = [[1.0, 1.0] for _ in range(n_clients)]
+        self._rng = np.random.default_rng(seed)
+
+    # ------------------------------------------------------------------
+    def advantage(self) -> np.ndarray:
+        T = len(self.L[0])
+        disc = self.gamma ** (T - 1 - np.arange(T))
+        a = np.zeros(self.n)
+        for i in range(self.n):
+            l_i = float(np.dot(disc, np.asarray(self.L[i])))
+            s_i = float(np.dot(disc, np.asarray(self.S[i])))
+            s_i = max(s_i, 1e-8)
+            a[i] = l_i / s_i + np.sqrt(2.0 * np.log(max(T, 2)) / s_i)
+        return a
+
+    def select(self) -> np.ndarray:
+        """Top-eta clients by advantage (ties broken randomly)."""
+        a = self.advantage()
+        jitter = self._rng.uniform(0, 1e-9, size=self.n)
+        return np.sort(np.argsort(-(a + jitter))[: self.k])
+
+    def update(self, selected: Sequence[int], losses: Sequence[float]):
+        """losses: server loss per *selected* client this iteration."""
+        sel = set(int(i) for i in selected)
+        loss_map = {int(i): float(l) for i, l in zip(selected, losses)}
+        for i in range(self.n):
+            if i in sel:
+                self.L[i].append(loss_map[i])
+                self.S[i].append(1.0)
+            else:
+                self.L[i].append((self.L[i][-1] + self.L[i][-2]) / 2.0)
+                self.S[i].append(0.0)
+
+    def new_round(self):
+        """Reset per-round histories (T is iterations in the round)."""
+        for i in range(self.n):
+            last = self.L[i][-1]
+            self.L[i] = [last, last]
+            self.S[i] = [1.0, 1.0]

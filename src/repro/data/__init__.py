@@ -1,0 +1,4 @@
+from repro.data.synthetic import (ClientData, mixed_cifar, mixed_noniid,
+                                  batch_iterator)
+from repro.data.tokens import lm_client_dataset, lm_batch_iterator
+from repro.data.partition import dirichlet_partition

@@ -1,0 +1,50 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Each op dispatches to the kernel (interpret=True on CPU — the container
+validates correctness; on TPU the same pallas_call lowers natively) and
+is shape-polymorphic via padding in the kernel modules.  The pure-jnp
+oracles live in ``repro.kernels.ref`` and tests assert allclose across
+shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import masked_adam as _ma
+from repro.kernels import ntxent as _nt
+from repro.kernels import soft_threshold as _st
+
+_ON_TPU = jax.default_backend() == "tpu"
+_INTERPRET = not _ON_TPU
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "normalize"))
+def ntxent_loss(q, labels, tau: float = 0.07, normalize: bool = True):
+    return _nt.ntxent_loss(q, labels, tau, normalize=normalize,
+                           interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """q: (B, Hq, S, hd); k/v: (B, Hkv, S, hd)."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("threshold",))
+def soft_threshold(x, threshold: float):
+    return _st.soft_threshold(x, threshold, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps"))
+def masked_adam(p, g, mu, nu, mask, step, lr: float = 1e-3,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    return _ma.masked_adam(p, g, mu, nu, mask, lr=lr, b1=b1, b2=b2,
+                           eps=eps, step=step, interpret=_INTERPRET)

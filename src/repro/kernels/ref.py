@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the ground truth the kernels are asserted against in tests
+(shape/dtype sweeps, interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ntxent_stats_ref(q, labels, tau: float = 0.07):
+    """Per-row NT-Xent statistics (the kernel's outputs).
+
+    Returns (lse, pos_sum, pos_cnt): logsumexp over j!=i of sim/tau, the
+    sum of positive-pair similarities, and the positive count per row.
+    """
+    q = q.astype(jnp.float32)
+    B = q.shape[0]
+    sim = (q @ q.T) / tau
+    eye = jnp.eye(B, dtype=bool)
+    sim_m = jnp.where(eye, -jnp.inf, sim)
+    lse = jax.nn.logsumexp(sim_m, axis=-1)
+    pos = (labels[:, None] == labels[None, :]) & ~eye
+    pos_sum = jnp.sum(jnp.where(pos, sim, 0.0), axis=-1)
+    pos_cnt = jnp.sum(pos, axis=-1).astype(jnp.float32)
+    return lse, pos_sum, pos_cnt
+
+
+def ntxent_loss_from_stats(lse, pos_sum, pos_cnt):
+    n_pos = jnp.maximum(jnp.sum(pos_cnt), 1.0)
+    return jnp.sum(pos_cnt * lse - pos_sum) / n_pos
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """Oracle: plain-softmax GQA attention.  q (B,Hq,S,hd), k/v (B,Hkv,S,hd)."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, hd)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32))
+    s = s / jnp.sqrt(hd)
+    qpos, kpos = jnp.arange(Sq), jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos[None] <= qpos[:, None]
+    if window:
+        mask &= kpos[None] > (qpos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, hd).astype(q.dtype)
+
+
+def soft_threshold_ref(x, threshold):
+    """L1 proximal operator: sign(x) * max(|x| - t, 0)."""
+    xf = x.astype(jnp.float32)
+    return (jnp.sign(xf) * jnp.maximum(jnp.abs(xf) - threshold, 0.0)
+            ).astype(x.dtype)
+
+
+def masked_adam_ref(p, g, mu, nu, mask, *, lr, b1, b2, eps, b1t, b2t):
+    """Fused AdaSplit server update (eq. 7): grad masked, Adam applied."""
+    gf = g.astype(jnp.float32) * mask.astype(jnp.float32)
+    mu2 = b1 * mu + (1 - b1) * gf
+    nu2 = b2 * nu + (1 - b2) * gf * gf
+    mhat = mu2 / b1t
+    nhat = nu2 / b2t
+    new_p = p.astype(jnp.float32) - lr * mhat / (jnp.sqrt(nhat) + eps)
+    return new_p.astype(p.dtype), mu2, nu2

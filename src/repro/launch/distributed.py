@@ -1,0 +1,53 @@
+"""Multi-host bootstrap for real TPU pods.
+
+On actual hardware every host runs the same program;
+``jax.distributed.initialize()`` wires the hosts into one runtime and
+``make_production_mesh`` then sees all 256/512 chips.  The container
+dry-run never calls this (it fakes devices via XLA_FLAGS instead) — this
+module is the deployment path, exercised by scripts/launch_pod.sh.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def initialize(coordinator: str | None = None,
+               num_processes: int | None = None,
+               process_id: int | None = None):
+    """Idempotent multi-host init.
+
+    On Cloud TPU the three arguments auto-detect from the metadata
+    server; set them explicitly for other fabrics:
+      coordinator    "host0:8476"
+      num_processes  number of hosts (e.g. 64 for a v5e-256 pod,
+                     128 for 2 pods)
+      process_id     this host's index
+    """
+    if jax.process_count() > 1:
+        return  # already initialized
+    kw = {}
+    if coordinator or os.environ.get("REPRO_COORDINATOR"):
+        kw = dict(
+            coordinator_address=coordinator
+            or os.environ["REPRO_COORDINATOR"],
+            num_processes=num_processes
+            or int(os.environ["REPRO_NUM_PROCESSES"]),
+            process_id=process_id or int(os.environ["REPRO_PROCESS_ID"]),
+        )
+    try:
+        jax.distributed.initialize(**kw)
+    except (ValueError, RuntimeError):
+        # single-process environments (tests, CPU container)
+        pass
+
+
+def describe():
+    return {
+        "process_index": jax.process_index(),
+        "process_count": jax.process_count(),
+        "local_devices": len(jax.local_devices()),
+        "global_devices": len(jax.devices()),
+        "platform": jax.default_backend(),
+    }

@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh): lower + compile the step
+function on placeholder devices, print ``memory_analysis()`` (proves it
+fits) and ``cost_analysis()`` (FLOPs/bytes for §Roofline), and parse the
+collective schedule out of the compiled HLO.  Results land as JSON under
+``artifacts/dryrun/`` — ``launch.roofline`` renders the §Roofline table
+from them.
+
+The XLA_FLAGS line above MUST run before any other import: jax locks the
+device count on first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-mini-3.8b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh pod|multipod]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES, get_config, list_archs
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import LaunchPolicy, build_step, default_policy
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# TPU v5e hardware constants (roofline targets)
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str,
+            policy: LaunchPolicy | None = None,
+            tag: str = "baseline") -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    multi = mesh_name == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_dev = mesh.size
+    policy = policy or default_policy(
+        cfg, shape, 32 if multi else 16)
+
+    t0 = time.time()
+    with mesh:
+        fn, args = build_step(cfg, mesh, shape, policy)
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    raw_cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # trip-count-corrected HLO walk (compiled.cost_analysis() counts
+    # while bodies once — see hlo_stats module docstring)
+    cost = hlo_stats.hlo_cost(hlo, n_devices=n_dev)
+    coll = cost.collectives
+
+    mem_rec = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_rec[k] = int(v)
+
+    flops = cost.flops
+    bytes_acc = cost.hbm_bytes
+
+    # analytic cross-check: MODEL_FLOPS = 6 * N_active * D tokens (train)
+    # or 2 * N_active * D (inference); per device = / n_dev
+    from repro.configs.base import INPUT_SHAPES as _IS
+    shp = _IS[shape_name]
+    n_active = cfg.active_param_count()
+    tokens = shp.global_batch * (shp.seq_len if shp.kind != "decode" else 1)
+    mult = 6.0 if shp.kind == "train" else 2.0
+    model_flops = mult * n_active * tokens
+    model_flops_dev = model_flops / n_dev
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "n_devices": n_dev,
+        "policy": dataclasses.asdict(policy),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_rec,
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "raw_cost_analysis_flops": float(raw_cost.get("flops", 0.0))
+        if raw_cost else 0.0,
+        "model_flops_per_device": model_flops_dev,
+        "useful_flops_ratio": model_flops_dev / flops if flops else 0.0,
+        "collective_bytes_per_device": coll.total_bytes,
+        "collective_by_kind": dict(coll.bytes_by_kind),
+        "collective_counts": dict(coll.count_by_kind),
+        # roofline terms, seconds (per-device quantities / per-chip rates)
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": bytes_acc / HBM_BW,
+        "t_collective": coll.total_bytes / ICI_BW,
+    }
+    rec["bottleneck"] = max(("t_compute", "t_memory", "t_collective"),
+                            key=lambda k: rec[k])
+    return rec
+
+
+def save(rec: dict, out_dir: Path = ARTIFACTS):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}_{rec['tag']}.json"
+    (out_dir / name).write_text(json.dumps(rec, indent=1))
+    return out_dir / name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--fsdp", type=int, default=None)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--seq-shard", type=int, default=None)
+    ap.add_argument("--attn-batch-shard", type=int, default=None)
+    ap.add_argument("--moe-batch-pin", type=int, default=None)
+    ap.add_argument("--attn-seq-shard", type=int, default=None)
+    ap.add_argument("--attn-head-pin", type=int, default=None)
+    args = ap.parse_args()
+
+    combos = []
+    archs = list_archs() if args.arch is None else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape is None else [args.shape]
+    for a in archs:
+        for s in shapes:
+            combos.append((a, s))
+
+    failures = []
+    for arch, shape in combos:
+        cfg = get_config(arch)
+        pol = default_policy(cfg, INPUT_SHAPES[shape],
+                             32 if args.mesh == "multipod" else 16)
+        over = {}
+        if args.fsdp is not None:
+            over["fsdp"] = bool(args.fsdp)
+        if args.microbatch is not None:
+            over["microbatch"] = args.microbatch
+        if args.seq_shard is not None:
+            over["seq_shard"] = bool(args.seq_shard)
+        if args.attn_batch_shard is not None:
+            over["attn_batch_shard"] = bool(args.attn_batch_shard)
+        if args.moe_batch_pin is not None:
+            over["moe_batch_pin"] = bool(args.moe_batch_pin)
+        if args.attn_seq_shard is not None:
+            over["attn_seq_shard"] = bool(args.attn_seq_shard)
+        if args.attn_head_pin is not None:
+            over["attn_head_pin"] = bool(args.attn_head_pin)
+        if over:
+            pol = dataclasses.replace(pol, **over)
+        try:
+            rec = run_one(arch, shape, args.mesh, pol, tag=args.tag)
+            p = save(rec)
+            print(f"OK   {arch:25s} {shape:12s} {args.mesh:9s} "
+                  f"compile={rec['compile_s']:.0f}s "
+                  f"flops/dev={rec['flops_per_device']:.3e} "
+                  f"coll/dev={rec['collective_bytes_per_device']:.3e} "
+                  f"-> {p.name}")
+        except Exception as e:
+            failures.append((arch, shape, repr(e)))
+            print(f"FAIL {arch:25s} {shape:12s} {args.mesh:9s} {e!r}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print("all dry-runs lowered + compiled")
+
+
+if __name__ == "__main__":
+    main()

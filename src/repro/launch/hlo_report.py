@@ -1,0 +1,123 @@
+"""Per-op breakdown of the dry-run HLO cost model (§Perf profiling).
+
+The 'profile' available without hardware: group HBM bytes / flops /
+collective bytes by (opcode, shape) with trip-count multipliers, so a
+hillclimb iteration can see exactly WHICH tensor traffic dominates the
+roofline term it is attacking.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hlo_report --arch qwen2-0.5b \
+      --shape train_4k [--mesh pod] [--top 25] [--fsdp 0 ...]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import re
+from collections import defaultdict
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES, get_config
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step, default_policy
+
+
+def report(hlo: str, n_devices: int, top: int = 25):
+    comps = hlo_stats._split_computations(hlo)
+    mult = hlo_stats._multipliers(comps)
+    fusion_bodies = hlo_stats._fusion_bodies(comps)
+
+    bytes_by = defaultdict(float)
+    flops_by = defaultdict(float)
+    coll_by = defaultdict(float)
+
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1)
+        syms = hlo_stats._symbols(lines)
+        in_fusion = cname in fusion_bodies
+        for ln in lines:
+            mo = hlo_stats._OP_RE.match(ln)
+            if not mo:
+                continue
+            rhs = mo.group(2)
+            op = hlo_stats._op_name_of(rhs)
+            if op is None:
+                continue
+            shape = rhs.split(op + "(")[0].strip()[:48]
+            key = f"{op:24s} {shape}"
+            if op == "dot":
+                flops_by[key] += m * hlo_stats._dot_flops(ln, syms)
+            kind = next((k for k in hlo_stats._COLLECTIVES
+                         if re.search(rf"\b{k}(-start)?\(", ln)), None)
+            if kind and f"{kind}-done(" not in ln:
+                b = hlo_stats._shape_bytes(rhs.split(kind)[0])
+                coll_by[key] += m * b
+            if not in_fusion and op not in hlo_stats._SKIP_BYTES_OPS:
+                b = hlo_stats._shape_bytes(rhs.split(op + "(")[0])
+                call = rhs.split(op + "(", 1)[1].split(")")[0] \
+                    if op + "(" in rhs else ""
+                for ref_ in re.findall(r"%([\w.\-]+)", call):
+                    b += hlo_stats._shape_bytes(syms.get(ref_, ""))
+                bytes_by[key] += m * b
+
+    def show(title, agg, unit=1e9, suffix="GB"):
+        print(f"\n== top {title} ==")
+        for k, v in sorted(agg.items(), key=lambda kv: -kv[1])[:top]:
+            print(f"  {v/unit:12.2f} {suffix}  {k}")
+        print(f"  {'':>12s} ----  total {sum(agg.values())/unit:.2f} {suffix}")
+
+    show("HBM bytes (per device)", bytes_by)
+    show("dot flops (per device)", flops_by, 1e12, "TF")
+    show("collective result-bytes (per device)", coll_by)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--fsdp", type=int, default=None)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--seq-shard", type=int, default=None)
+    ap.add_argument("--attn-batch-shard", type=int, default=None)
+    ap.add_argument("--moe-batch-pin", type=int, default=None)
+    ap.add_argument("--attn-seq-shard", type=int, default=None)
+    ap.add_argument("--attn-head-pin", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = INPUT_SHAPES[args.shape]
+    multi = args.mesh == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    pol = default_policy(cfg, shape, 32 if multi else 16)
+    over = {}
+    if args.fsdp is not None:
+        over["fsdp"] = bool(args.fsdp)
+    if args.microbatch is not None:
+        over["microbatch"] = args.microbatch
+    if args.seq_shard is not None:
+        over["seq_shard"] = bool(args.seq_shard)
+    if args.attn_batch_shard is not None:
+        over["attn_batch_shard"] = bool(args.attn_batch_shard)
+    if args.moe_batch_pin is not None:
+        over["moe_batch_pin"] = bool(args.moe_batch_pin)
+    if args.attn_seq_shard is not None:
+        over["attn_seq_shard"] = bool(args.attn_seq_shard)
+    if args.attn_head_pin is not None:
+        over["attn_head_pin"] = bool(args.attn_head_pin)
+    if over:
+        pol = dataclasses.replace(pol, **over)
+    print("policy:", pol)
+    with mesh:
+        fn, fargs = build_step(cfg, mesh, shape, pol)
+        compiled = jax.jit(fn).lower(*fargs).compile()
+    report(compiled.as_text(), mesh.size, args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,318 @@
+"""HLO cost model over compiled module text (§Roofline).
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically: a 10-step scanned matmul reports 1x the matmul FLOPs) and
+has no collective term at all.  Since every production model here scans
+its layers, we compute all three roofline terms ourselves by walking the
+HLO text with trip-count multipliers (XLA annotates scan loops with
+``backend_config={"known_trip_count":{"n":...}}``):
+
+* ``flops``       — 2 * result_elems * contracted_elems per dot, times
+                    the enclosing-loop multiplier (matmul-dominated
+                    workloads; elementwise flops are ignored, recorded
+                    as the documented approximation).
+* ``hbm bytes``   — operand+result bytes of every non-trivial op OUTSIDE
+                    fusion bodies (fusion internals are register/VMEM
+                    resident on the TPU target, so fusion-boundary
+                    traffic is the right HBM model).
+* ``collectives`` — ring-model bytes per op kind (below).
+
+Collective byte model (per-device link traffic):
+  all-gather:        result_bytes * (n-1)/n   (receives all other shards)
+  reduce-scatter:    operand_bytes * (n-1)/n
+  all-reduce:        2 * operand_bytes * (n-1)/n (RS + AG ring)
+  all-to-all:        operand_bytes * (n-1)/n
+  collective-permute: operand_bytes
+where n = replica-group size parsed from the op.
+
+Bytes reported are PER-DEVICE link traffic estimates:
+  all-gather:        result_bytes * (n-1)/n   (receives all other shards)
+  reduce-scatter:    operand_bytes * (n-1)/n
+  all-reduce:        2 * operand_bytes * (n-1)/n (RS + AG ring)
+  all-to-all:        operand_bytes * (n-1)/n
+  collective-permute: operand_bytes
+where n = replica-group size parsed from the op.  This is the standard
+ring-collective model used for ICI roofline estimates.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO type string (possibly a tuple '(a, b)')."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    """Largest replica group size mentioned on the op line."""
+    m = re.search(r"replica_groups=\{([^}]*)\}", line)
+    if m:
+        groups = m.group(1)
+        sizes = [len(g.split(",")) for g in re.findall(r"\{([^{}]*)\}",
+                                                       "{" + groups + "}")]
+        sizes = [s for s in sizes if s > 0]
+        if sizes:
+            return max(sizes)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [num_groups, group_size]
+        return int(m.group(2))
+    return n_devices
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its op lines."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        # computation header: "[ENTRY ]%name (args...) -> type {"
+        if cur is None and s.endswith("{") and "=" not in s.split("(")[0]:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _while_info(comps: Dict[str, List[str]]) -> List[Tuple[str, str, int]]:
+    """(parent_comp, body_comp, trip_count) for every while op."""
+    out = []
+    for cname, lines in comps.items():
+        for ln in lines:
+            if " while(" not in ln:
+                continue
+            mb = re.search(r"body=%?([\w.\-]+)", ln)
+            if not mb:
+                continue
+            body = mb.group(1)
+            mt = re.search(r"known_trip_count\D*?(\d+)", ln)
+            trip = int(mt.group(1)) if mt else 1
+            out.append((cname, body, trip))
+    return out
+
+
+def _multipliers(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """Effective execution multiplier per computation (nested whiles).
+
+    XLA dedups identical while bodies, so one body computation may be
+    referenced from several while sites — executions SUM over sites.
+    Fixpoint over nesting depth (while graphs are DAGs)."""
+    whiles = _while_info(comps)
+    mult: Dict[str, int] = defaultdict(lambda: 1)
+    for _ in range(12):
+        sums: Dict[str, float] = defaultdict(float)
+        for parent, body, trip in whiles:
+            sums[body] += mult[parent] * trip
+        changed = False
+        for b, v in sums.items():
+            v = int(v)
+            if mult[b] != v:
+                mult[b] = v
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_CALL_ATTRS = ("calls", "body", "condition", "to_apply",
+               "branch_computations")
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "iota", "after-all", "partition-id",
+                   "replica-id"}
+
+
+def _op_name_of(rhs: str) -> Optional[str]:
+    """Opcode of an HLO instruction right-hand side."""
+    # rhs looks like:  TYPE opcode(operands), attrs...
+    m = re.match(r"(?:\([^=]*\)|[\w\[\],{}\s]*?)\s*([\w\-]+)\(", rhs)
+    return m.group(1) if m else None
+
+
+def _fusion_bodies(comps: Dict[str, List[str]]) -> set:
+    bodies = set()
+    for lines in comps.values():
+        for ln in lines:
+            if " fusion(" in ln:
+                m = re.search(r"calls=%?([\w.\-]+)", ln)
+                if m:
+                    bodies.add(m.group(1))
+    return bodies
+
+
+def _symbols(lines: List[str]) -> Dict[str, str]:
+    """%name -> type string for every instruction in a computation."""
+    syms = {}
+    for ln in lines:
+        m = _OP_RE.match(ln)
+        if m:
+            name, rhs = m.groups()
+            # type is everything before the opcode call
+            op = _op_name_of(rhs)
+            if op:
+                syms[name] = rhs.split(op + "(")[0]
+            else:
+                syms[name] = rhs
+    return syms
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def _dot_flops(ln: str, syms: Dict[str, str]) -> float:
+    """2 * result_elems * contracted_elems for a dot instruction."""
+    _, _, rhs = ln.partition("=")
+    result_b = _shape_dims(rhs.split("dot(")[0])
+    result_elems = 1
+    for d in result_b:
+        result_elems *= d
+    ops = re.findall(r"%([\w.\-]+)", rhs.split("dot(", 1)[1].split(")")[0])
+    lhs_dims = _shape_dims(syms.get(ops[0], "")) if ops else []
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+    contracted = 1
+    if mc and lhs_dims:
+        for d in mc.group(1).split(","):
+            if d:
+                i = int(d)
+                if i < len(lhs_dims):
+                    contracted *= lhs_dims[i]
+    return 2.0 * result_elems * contracted
+
+
+def _conv_flops(ln: str, syms: Dict[str, str]) -> float:
+    _, _, rhs = ln.partition("=")
+    result_elems = 1
+    for d in _shape_dims(rhs.split("convolution(")[0]):
+        result_elems *= d
+    ops = re.findall(r"%([\w.\-]+)",
+                     rhs.split("convolution(", 1)[1].split(")")[0])
+    k_elems = 1
+    if len(ops) > 1:
+        kdims = _shape_dims(syms.get(ops[1], ""))
+        for d in kdims[:-1]:   # kernel spatial x in_channels
+            k_elems *= d
+    return 2.0 * result_elems * k_elems
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: "CollectiveStats" = None
+    n_dots: int = 0
+    n_unknown_trip_whiles: int = 0
+
+    @property
+    def collective_bytes(self) -> float:
+        return self.collectives.total_bytes if self.collectives else 0.0
+
+
+def hlo_cost(hlo: str, n_devices: int = 1) -> HloCost:
+    """Trip-count-corrected flops / HBM bytes / collective bytes."""
+    comps = _split_computations(hlo)
+    mult = _multipliers(comps)
+    fusion_bodies = _fusion_bodies(comps)
+    cost = HloCost(collectives=collective_bytes(hlo, n_devices))
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1)
+        syms = _symbols(lines)
+        in_fusion = cname in fusion_bodies
+        for ln in lines:
+            mo = _OP_RE.match(ln)
+            if not mo:
+                continue
+            rhs = mo.group(2)
+            op = _op_name_of(rhs)
+            if op is None:
+                continue
+            if op == "dot":
+                cost.flops += m * _dot_flops(ln, syms)
+                cost.n_dots += 1
+            elif op == "convolution":
+                cost.flops += m * _conv_flops(ln, syms)
+            if not in_fusion and op not in _SKIP_BYTES_OPS:
+                # result bytes + operand bytes (operands resolved by name)
+                b = _shape_bytes(rhs.split(op + "(")[0])
+                call = rhs.split(op + "(", 1)[1].split(")")[0] \
+                    if op + "(" in rhs else ""
+                for ref in re.findall(r"%([\w.\-]+)", call):
+                    b += _shape_bytes(syms.get(ref, ""))
+                cost.hbm_bytes += m * b
+    return cost
+
+
+def collective_bytes(hlo: str, n_devices: int = 1) -> CollectiveStats:
+    comps = _split_computations(hlo)
+    mult = _multipliers(comps)
+    stats = CollectiveStats(defaultdict(float), defaultdict(int))
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1)
+        for ln in lines:
+            kind = next((k for k in _COLLECTIVES
+                         if re.search(rf"\b{k}(-start|-done)?\(", ln)), None)
+            if kind is None or f"{kind}-done(" in ln:
+                continue
+            # HLO body lines reference operands by %name only, so we work
+            # from the RESULT type (printed before the opcode) and derive
+            # operand sizes from collective semantics.
+            _, _, rhs = ln.partition("=")
+            result_b = _shape_bytes(rhs.split(kind)[0])
+            n = max(_group_size(ln, n_devices), 1)
+            ring = (n - 1) / n if n > 1 else 0.0
+            if kind == "all-gather":
+                b = result_b * ring                  # result = gathered
+            elif kind == "all-reduce":
+                b = 2 * result_b * ring              # RS + AG ring
+            elif kind == "reduce-scatter":
+                b = result_b * (n - 1)               # operand = result * n
+            elif kind == "all-to-all":
+                b = result_b * ring
+            else:  # collective-permute
+                b = result_b
+            stats.bytes_by_kind[kind] += b * m
+            stats.count_by_kind[kind] += m
+    return stats

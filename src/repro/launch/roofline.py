@@ -1,0 +1,87 @@
+"""§Roofline table renderer — reads artifacts/dryrun/*.json.
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS utilisation, and a one-line
+note on what would move the dominant term (heuristic from the term
+breakdown).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline [--mesh pod] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def load(mesh=None, tag=None):
+    recs = []
+    for p in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if mesh and r["mesh"] != mesh:
+            continue
+        if tag and r["tag"] != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def note_for(rec) -> str:
+    b = rec["bottleneck"]
+    kinds = rec.get("collective_by_kind", {})
+    if b == "t_memory":
+        return ("attention/intermediate HBM traffic dominates -> fuse "
+                "(Pallas flash kernel keeps m/l/acc in VMEM)")
+    if b == "t_collective":
+        top = max(kinds, key=kinds.get) if kinds else "?"
+        return (f"{top} dominates -> revisit sharding axis / fold "
+                "resharding out of the layer loop")
+    return "compute-bound: near roofline; raise arithmetic intensity"
+
+
+def fmt_row(r):
+    shp = f"{r['arch']}|{r['shape']}"
+    return (f"{shp:44s} {r['tag']:9s} {r['t_compute']:9.3f} "
+            f"{r['t_memory']:9.3f} {r['t_collective']:9.3f} "
+            f"{r['bottleneck'][2:]:10s} "
+            f"{r.get('useful_flops_ratio', 0):6.2f}")
+
+
+def md_table(recs):
+    lines = ["| arch | shape | tag | t_compute (s) | t_memory (s) | "
+             "t_collective (s) | bottleneck | MODEL/HLO flops |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['tag']} | "
+            f"{r['t_compute']:.3f} | {r['t_memory']:.3f} | "
+            f"{r['t_collective']:.3f} | {r['bottleneck'][2:]} | "
+            f"{r.get('useful_flops_ratio', 0):.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.mesh, args.tag)
+    if args.md:
+        print(md_table(recs))
+        return
+    print(f"{'arch|shape':44s} {'tag':9s} {'compute':>9s} {'memory':>9s} "
+          f"{'collectiv':>9s} {'bottleneck':10s} {'M/H':>6s}")
+    for r in recs:
+        print(fmt_row(r))
+    if recs:
+        from collections import Counter
+        c = Counter(r["bottleneck"] for r in recs)
+        print("\nbottleneck distribution:", dict(c))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,547 @@
+"""Pod-scale step functions for every (architecture x input shape).
+
+This is the LM/production variant of the AdaSplit protocol
+(``repro.core.adasplit`` is the paper-scale classification variant):
+
+* client cohorts <-> ``data`` mesh axis — one cohort per data slice,
+  client params stacked with a leading cohort dim sharded on ``data``;
+  the client sub-model trains with the supervised NT-Xent loss on
+  sequence-class labels, with NO gradient from the server
+  (``stop_gradient`` at the split boundary = P_si = 0).
+* server <-> ``model`` axis — Megatron TP (+ expert parallel), trained
+  with chunked CE + lambda*L1 over the per-client structured masks; the
+  orchestrator's per-iteration cohort selection enters the compiled
+  graph as a (C,) ``select`` weight vector.
+* decode shapes lower ``serve_step``: ONE token against a seq_len KV /
+  SSM cache, with the selected client's mask pre-folded into the server
+  weights (``fold_masks``).
+
+``build_*`` functions return (fn, state_sds, batch_sds) where the SDS
+trees carry NamedShardings — ``jax.jit(fn).lower(state, batch)`` is the
+multi-pod dry-run contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (INPUT_SHAPES, LONG_CONTEXT_WINDOW,
+                                InputShape, ModelConfig)
+from repro.core import masks as masks_mod
+from repro.core.losses import (chunked_cross_entropy, l1_penalty,
+                               ntxent_supervised)
+from repro.models import transformer as tfm
+from repro.models import decode as dec
+from repro.optim.adam import adam_init, adam_update
+from repro.sharding.rules import (MeshAxes, cache_pspecs, client_pspecs,
+                                  mask_pspecs, opt_pspecs, server_pspecs)
+
+
+# ---------------------------------------------------------------------------
+# Per-arch launch policy (baseline; hillclimbed variants override fields)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LaunchPolicy:
+    fsdp: bool = False            # shard server params+grads over data too
+    microbatch: int = 1           # grad-accumulation chunks per step
+    seq_shard: bool = True        # Megatron-SP residual constraint (train)
+    attn_batch_shard: bool = False  # batch-shard attention over `model`
+    attn_seq_shard: bool = False    # seq-shard q over `model` (ring-like)
+    attn_head_pin: bool = False     # pin q heads->model, kv->replicated
+    moe_batch_pin: bool = False   # pin MoE dispatch to batch-sharded
+    remat: bool = True
+    param_dtype: str = "bfloat16"  # large-leaf param dtype (moments f32)
+    lr: float = 1e-3
+    tau: float = 0.07
+    lam: float = 1e-5
+    proj_dim: int = 64
+    ce_chunk: int = 512
+    n_seq_classes: int = 16       # NT-Xent sequence-class label space
+
+
+def default_policy(cfg: ModelConfig, shape: Optional[InputShape] = None,
+                   data_size: int = 16) -> LaunchPolicy:
+    """Baseline policy, auto-sized to fit v5e HBM.
+
+    microbatch: chosen so the per-chip remat scan-carry (the dominant
+    training residual: n_layers x b_local x S x D x 2B) stays under ~3GB.
+    seq_shard (Megatron-SP) and FSDP/ZeRO turn on for >10B models.
+    """
+    big = cfg.param_count() > 10e9
+    mb = 1
+    if shape is not None and shape.kind == "train" and not cfg.is_conv:
+        b_local = max(shape.global_batch // data_size, 1)
+        carry = (cfg.n_layers + cfg.n_encoder_layers) * b_local \
+            * shape.seq_len * cfg.d_model * 2
+        if big:  # SP already divides the carry by the model axis
+            carry /= 16
+        budget = 3e9
+        while mb < b_local and carry / mb > budget:
+            mb *= 2
+    return LaunchPolicy(fsdp=big, microbatch=mb, seq_shard=big)
+
+
+# §Perf hillclimb winners (EXPERIMENTS.md §Perf) — the beyond-paper
+# optimized configs, kept SEPARATE from the paper-faithful baseline.
+OPTIMIZED_OVERRIDES = {
+    ("qwen2-0.5b", "train_4k"): dict(attn_batch_shard=True),
+    ("deepseek-moe-16b", "train_4k"): dict(seq_shard=False, microbatch=4,
+                                           moe_batch_pin=True),
+    ("qwen2-vl-72b", "train_4k"): dict(attn_head_pin=True, microbatch=4),
+    # the deepseek MoE recipe transfers (EXPERIMENTS.md bonus): 1.9x
+    ("qwen3-moe-30b-a3b", "train_4k"): dict(seq_shard=False, microbatch=4,
+                                            moe_batch_pin=True),
+}
+
+
+def optimized_policy(cfg: ModelConfig, shape: InputShape,
+                     data_size: int = 16) -> LaunchPolicy:
+    pol = default_policy(cfg, shape, data_size)
+    over = OPTIMIZED_OVERRIDES.get((cfg.name, shape.name))
+    return dataclasses.replace(pol, **over) if over else pol
+
+
+def _cast_params(tree, dtype):
+    """bf16 master params for large matmul leaves; small/1D leaves
+    (norm scales, A_log, dt_bias, biases) stay f32 for stability."""
+    dt = jnp.dtype(dtype)
+
+    def one(p):
+        if p.dtype == jnp.float32 and p.ndim >= 2 and p.size >= (1 << 16):
+            return p.astype(dt)
+        return p
+    return jax.tree.map(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, weak-type-correct, no alloc)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def arch_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """Sliding window used for this (arch, shape)."""
+    if cfg.sliding_window:
+        return cfg.sliding_window
+    if shape.name == "long_500k" and cfg.supports_long_context() == "windowed":
+        return LONG_CONTEXT_WINDOW
+    return 0
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh,
+                policy: Optional[LaunchPolicy] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step's data inputs."""
+    ax = MeshAxes.from_mesh(mesh)
+    policy = policy or default_policy(cfg, shape, ax.data_size)
+    B, S = shape.global_batch, shape.seq_len
+    bs = ax.data_spec if B % max(ax.data_size, 1) == 0 else None
+    tok = lambda shp: _sds(shp, jnp.int32, mesh,
+                           P(*((bs,) + (None,) * (len(shp) - 1))))
+    if shape.kind == "train":
+        C = ax.data_size
+        batch = {
+            "tokens": tok((B, S)),
+            "labels": tok((B, S)),
+            "seq_class": tok((B,)),
+            "select": _sds((C,), jnp.float32, mesh, P(ax.data_spec)),
+        }
+        batch.update(_extras_specs(cfg, B, S, mesh, bs))
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": tok((B, S))}
+        batch.update(_extras_specs(cfg, B, S, mesh, bs))
+        return batch
+    # decode: one token + position
+    return {
+        "token": tok((B, 1)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _extras_specs(cfg, B, S, mesh, bs):
+    ex = {}
+    if cfg.is_encoder_decoder:
+        ex["src_embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                                P(bs, None, None))
+    if cfg.modality == "vision_text":
+        F = max(cfg.frontend_frames, 1)
+        ex["vision_embeds"] = _sds((B, F, cfg.d_model), jnp.bfloat16, mesh,
+                                   P(bs, None, None))
+        ex["positions"] = _sds((B, S, 3), jnp.int32, mesh, P(bs, None, None))
+    return ex
+
+
+def _extras_from_batch(cfg, batch):
+    keys = ("src_embeds", "vision_embeds", "positions")
+    ex = {k: batch[k] for k in keys if k in batch}
+    return ex or None
+
+
+# ---------------------------------------------------------------------------
+# State construction (eval_shape for dry-run; real init for execution)
+# ---------------------------------------------------------------------------
+
+
+def _proj_init(key, d_model, proj_dim):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (d_model, 128)) / np.sqrt(d_model),
+            "b1": jnp.zeros((128,)),
+            "w2": jax.random.normal(k2, (128, proj_dim)) / np.sqrt(128)}
+
+
+def init_train_state(cfg: ModelConfig, n_cohorts: int,
+                     policy: LaunchPolicy, key):
+    """Trainables + Adam state.  Client leaves have leading cohort dim."""
+    kc, ks, kp = jax.random.split(key, 3)
+
+    def one_client(k):
+        return {"model": tfm.init_client_params(cfg, k),
+                "proj": _proj_init(jax.random.fold_in(k, 7), cfg.d_model,
+                                   policy.proj_dim)}
+
+    clients = [one_client(jax.random.fold_in(kc, i))
+               for i in range(n_cohorts)]
+    client = jax.tree.map(lambda *x: jnp.stack(x), *clients)
+    server = tfm.init_server_params(cfg, ks)
+    masks = masks_mod.init_unit_masks(cfg, n_cohorts)
+    trainables = {"client": _cast_params(client, policy.param_dtype),
+                  "server": _cast_params(server, policy.param_dtype),
+                  "masks": masks}
+    return {"trainables": trainables, "opt": adam_init(trainables)}
+
+
+def train_state_specs(cfg: ModelConfig, state, mesh,
+                      policy: LaunchPolicy):
+    """PartitionSpec tree matching ``init_train_state`` output."""
+    ax = MeshAxes.from_mesh(mesh)
+    t = state["trainables"]
+    cl_spec = client_pspecs(cfg, t["client"], ax, cohort_dim=True)
+    sv_spec = server_pspecs(cfg, t["server"], ax, fsdp=policy.fsdp)
+    mk_spec = mask_pspecs(cfg, t["masks"], ax)
+    tr_spec = {"client": cl_spec, "server": sv_spec, "masks": mk_spec}
+    op_spec = opt_pspecs(tr_spec, t, ax, zero=True)
+    return {"trainables": tr_spec, "opt": op_spec}
+
+
+def _attach(mesh, specs, tree):
+    """SDS tree with NamedShardings from a spec tree + abstract tree."""
+    return jax.tree.map(
+        lambda sds, sp: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, sp)),
+        tree, specs)
+
+
+def train_state_sds(cfg: ModelConfig, mesh, policy: LaunchPolicy):
+    ax = MeshAxes.from_mesh(mesh)
+    abstract = jax.eval_shape(
+        lambda: init_train_state(cfg, ax.data_size, policy,
+                                 jax.random.PRNGKey(0)))
+    specs = train_state_specs(cfg, abstract, mesh, policy)
+    return _attach(mesh, specs, abstract)
+
+
+# ---------------------------------------------------------------------------
+# Train step (AdaSplit global phase — the paper's perf-relevant step)
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, mesh, shape: InputShape,
+                     policy: Optional[LaunchPolicy] = None):
+    """Returns (train_step, state_sds, batch_sds)."""
+    ax = MeshAxes.from_mesh(mesh)
+    policy = policy or default_policy(cfg, shape, ax.data_size)
+    C = ax.data_size
+    B, S = shape.global_batch, shape.seq_len
+    assert B % C == 0, (B, C)
+    b = B // C
+    window = arch_window(cfg, shape)
+    # policy.microbatch = number of grad-accumulation chunks per step
+    n_micro = max(1, min(policy.microbatch, b))
+    while b % n_micro:
+        n_micro -= 1
+    mb = b // n_micro
+
+    seq_ok = policy.seq_shard and S % max(ax.model_size, 1) == 0
+    res_spec = P(ax.data_spec, ax.model if seq_ok else None, None)
+    inner_res_spec = P(ax.model if seq_ok else None, None)
+
+    # attention batch-sharding over `model` (§Perf): global q/k/v are
+    # (B, S, H, hd) — shard B over data AND model; inside the cohort
+    # vmap the spec loses the (vmapped) cohort dim, so B' shards on
+    # model alone and spmd_axis_name prepends data.
+    qkv_global = qkv_inner = out_global = out_inner = None
+    if policy.attn_batch_shard:
+        both = tuple(a for a in ((ax.data + (ax.model,))
+                                 if ax.model else ax.data))
+        qkv_global = P(both, None, None, None)
+        qkv_inner = P(ax.model, None, None, None)
+        # attention exit pinned back to the residual layout
+        out_global = P(ax.data_spec, None, None, None)
+        out_inner = P(None, None, None)
+
+    if policy.attn_head_pin:
+        qkv_global = (P(ax.data_spec, None, ax.model, None),
+                      P(ax.data_spec, None, None, None))
+        qkv_inner = (P(None, None, ax.model, None),
+                     P(None, None, None, None))
+        out_global = P(ax.data_spec, None, ax.model, None)
+        out_inner = P(None, None, ax.model, None)
+
+    if policy.attn_seq_shard:
+        qkv_global = (P(ax.data_spec, ax.model, None, None),
+                      P(ax.data_spec, None, None, None))
+        qkv_inner = (P(None, ax.model, None, None),
+                     P(None, None, None, None))
+        out_global = P(ax.data_spec, ax.model, None, None)
+        out_inner = P(None, ax.model, None, None)
+
+    moe_global = moe_inner = None
+    if policy.moe_batch_pin:
+        def _pin(spec):
+            return lambda t: jax.lax.with_sharding_constraint(t, spec)
+        moe_global = {
+            "h": _pin(P(ax.data_spec, None, None)),
+            "ep_in": _pin(P(ax.data_spec, ax.model, None, None)),
+            "ep_out": _pin(P(ax.data_spec, None, None, None)),
+        }
+        moe_inner = {
+            "h": _pin(P(None, None)),
+            "ep_in": _pin(P(ax.model, None, None)),
+            "ep_out": _pin(P(None, None, None)),
+        }
+
+    def constrain_global(x):
+        if x.ndim != 3:
+            return x
+        return jax.lax.with_sharding_constraint(x, res_spec)
+
+    def constrain_inner(x):  # inside the cohort vmap: (b', S, D)
+        if x.ndim != 3:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, P(None, *inner_res_spec))
+
+    spmd_axes = ax.data_spec
+
+    def cohort_client_loss(cp, tokens_b, seq_class_b, extras_b):
+        acts = tfm.client_forward(cfg, cp["model"], tokens_b, extras_b,
+                                  remat=policy.remat,
+                                  constrain=constrain_inner,
+                                  qkv_shard=qkv_inner,
+                                  attn_out_shard=out_inner,
+                                  moe_constrain=moe_inner)
+        pooled = jnp.mean(acts.astype(jnp.float32), axis=1)   # (b', D)
+        h = jax.nn.relu(pooled @ cp["proj"]["w1"] + cp["proj"]["b1"])
+        q = h @ cp["proj"]["w2"]
+        loss = ntxent_supervised(q, seq_class_b, policy.tau)
+        return loss, acts
+
+    vmapped_client = jax.vmap(cohort_client_loss,
+                              spmd_axis_name=spmd_axes)
+
+    def micro_loss(trainables, mtokens, mlabels, mseq_class, select,
+                   extras):
+        # --- client: per-cohort NT-Xent ---
+        tk = mtokens.reshape(C, mb, S)
+        sc = mseq_class.reshape(C, mb)
+        ex_c = None
+        if extras is not None:
+            ex_c = jax.tree.map(
+                lambda e: e.reshape((C, mb) + e.shape[1:]), extras)
+        closs, acts = vmapped_client(trainables["client"], tk, sc, ex_c)
+        l_client = jnp.mean(closs)
+
+        # --- server: CE + lambda*L1(masks), stop-grad boundary ---
+        acts_flat = jax.lax.stop_gradient(acts).reshape(C * mb, S, -1)
+        acts_flat = constrain_global(acts_flat)
+        client_ids = jnp.repeat(jnp.arange(C), mb)
+        gates = masks_mod.expand_gates(trainables["masks"], client_ids)
+        hidden, aux = tfm.server_forward(
+            cfg, trainables["server"], acts_flat, mtokens, extras,
+            gates=gates, window=window, remat=policy.remat,
+            constrain=constrain_global, return_hidden=True,
+            qkv_shard=qkv_global, attn_out_shard=out_global,
+            moe_constrain=moe_global)
+        w = select[client_ids][:, None] * jnp.ones((1, S), jnp.float32)
+        ce = chunked_cross_entropy(hidden,
+                                   trainables["server"]["lm_head"]["table"],
+                                   mlabels, cfg.vocab_size,
+                                   chunk=policy.ce_chunk, weights=w)
+        l_server = ce + policy.lam * l1_penalty(trainables["masks"]) \
+            + cfg.router_aux_coef * aux
+        return l_client + l_server, (l_client, ce)
+
+    def train_step(state, batch):
+        trainables, opt = state["trainables"], state["opt"]
+        extras = _extras_from_batch(cfg, batch)
+
+        # microbatch split: per-cohort batch b -> n_micro chunks of mb.
+        # reshape (B, ...) = (C, b, ...) -> (n_micro, C*mb, ...)
+        def split(x):
+            y = x.reshape((C, n_micro, mb) + x.shape[1:])
+            return y.swapaxes(0, 1).reshape((n_micro, C * mb) + x.shape[1:])
+
+        toks, labs = split(batch["tokens"]), split(batch["labels"])
+        scls = split(batch["seq_class"])
+        ex_split = (jax.tree.map(split, extras)
+                    if extras is not None else None)
+        grad_fn = jax.value_and_grad(micro_loss, has_aux=True)
+
+        def micro(carry, xs):
+            g_acc, lc_acc, ce_acc = carry
+            mt, ml, ms = xs[:3]
+            mex = xs[3] if len(xs) > 3 else None
+            (_, (lc, ce)), g = grad_fn(trainables, mt, ml, ms,
+                                       batch["select"], mex)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            return (g_acc, lc_acc + lc, ce_acc + ce), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             trainables)
+        if n_micro == 1:
+            (_, (lc, ce)), grads = grad_fn(
+                trainables, toks[0], labs[0], scls[0], batch["select"],
+                jax.tree.map(lambda e: e[0], ex_split)
+                if ex_split is not None else None)
+        else:
+            xs = (toks, labs, scls) + ((ex_split,) if ex_split is not None
+                                       else ())
+            (grads, lc, ce), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros(()), jnp.zeros(())), xs)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            lc, ce = lc / n_micro, ce / n_micro
+
+        new_t, new_opt = adam_update(trainables, grads, opt, lr=policy.lr)
+        new_state = {"trainables": new_t, "opt": new_opt}
+        # pin outputs to the input layout: without this XLA may all-gather
+        # freshly-updated params (in f32, pre-downcast) to satisfy an
+        # inferred replicated output sharding (§Perf pair-3 it5)
+        new_state = jax.tree.map(
+            lambda t, sp: jax.lax.with_sharding_constraint(t, sp),
+            new_state, _state_spec_tree)
+        metrics = {"l_client": lc, "ce": ce}
+        return new_state, metrics
+
+    state_sds = train_state_sds(cfg, mesh, policy)
+    _state_spec_tree = jax.tree.map(lambda s: s.sharding.spec, state_sds)
+    batch_sds = input_specs(cfg, shape, mesh, policy)
+    return train_step, state_sds, batch_sds
+
+
+# ---------------------------------------------------------------------------
+# Serve steps (prefill / decode) — masks pre-folded (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+def init_serve_params(cfg: ModelConfig, key, dtype: str = "bfloat16"):
+    """One client's model + (mask-folded) server model."""
+    kc, ks = jax.random.split(key)
+    return _cast_params({"client": tfm.init_client_params(cfg, kc),
+                         "server": tfm.init_server_params(cfg, ks)}, dtype)
+
+
+def serve_param_specs(cfg: ModelConfig, params, mesh):
+    ax = MeshAxes.from_mesh(mesh)
+    return {"client": client_pspecs(cfg, params["client"], ax,
+                                    cohort_dim=False),
+            "server": server_pspecs(cfg, params["server"], ax, fsdp=False)}
+
+
+def serve_params_sds(cfg: ModelConfig, mesh):
+    abstract = jax.eval_shape(
+        lambda: init_serve_params(cfg, jax.random.PRNGKey(0)))
+    specs = serve_param_specs(cfg, abstract, mesh)
+    return _attach(mesh, specs, abstract)
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, shape: InputShape,
+                       policy: Optional[LaunchPolicy] = None):
+    ax = MeshAxes.from_mesh(mesh)
+    policy = policy or default_policy(cfg, shape, ax.data_size)
+    window = arch_window(cfg, shape)
+    cache_len = min(shape.seq_len, window) if window else shape.seq_len
+
+    qkv_shard = out_shard = None
+    bs = ax.data_spec if shape.global_batch % max(ax.data_size, 1) == 0 \
+        else None
+    if policy.attn_seq_shard:
+        qkv_shard = (P(bs, ax.model, None, None),
+                     P(bs, None, None, None))
+        out_shard = P(bs, ax.model, None, None)
+
+    def prefill_step(params, batch):
+        extras = _extras_from_batch(cfg, batch)
+        logits, cache = dec.prefill(cfg, params, batch["tokens"], extras,
+                                    window=window, cache_len=cache_len,
+                                    qkv_shard=qkv_shard,
+                                    attn_out_shard=out_shard)
+        return logits, cache
+
+    params_sds = serve_params_sds(cfg, mesh)
+    batch_sds = input_specs(cfg, shape, mesh, policy)
+    return prefill_step, params_sds, batch_sds
+
+
+def decode_cache_sds(cfg: ModelConfig, mesh, shape: InputShape):
+    ax = MeshAxes.from_mesh(mesh)
+    window = arch_window(cfg, shape)
+    cache_len = min(shape.seq_len, window) if window else shape.seq_len
+    abstract = jax.eval_shape(
+        lambda: dec.init_cache(cfg, shape.global_batch, cache_len,
+                               window=window,
+                               src_len=shape.seq_len
+                               if cfg.is_encoder_decoder else 0))
+    shardable = shape.global_batch % max(ax.data_size, 1) == 0
+    specs = jax.tree.map(lambda _: None, abstract)  # placeholder
+    specs = cache_pspecs(cfg, abstract, ax, batch_shardable=shardable)
+    return _attach(mesh, specs, abstract)
+
+
+def build_decode_step(cfg: ModelConfig, mesh, shape: InputShape,
+                      policy: Optional[LaunchPolicy] = None):
+    """serve_step: ONE new token with a seq_len cache."""
+    policy = policy or default_policy(cfg, shape,
+                                      MeshAxes.from_mesh(mesh).data_size)
+    window = arch_window(cfg, shape)
+
+    def serve_step(params, cache, batch):
+        logits, new_cache = dec.decode_step(cfg, params, batch["token"],
+                                            cache, batch["pos"],
+                                            window=window)
+        return logits, new_cache
+
+    params_sds = serve_params_sds(cfg, mesh)
+    cache_sds = decode_cache_sds(cfg, mesh, shape)
+    batch_sds = input_specs(cfg, shape, mesh, policy)
+    return serve_step, params_sds, cache_sds, batch_sds
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+
+def build_step(cfg: ModelConfig, mesh, shape: InputShape,
+               policy: Optional[LaunchPolicy] = None):
+    """Returns (fn, example_args: tuple of SDS trees) for lower()."""
+    if shape.kind == "train":
+        fn, state, batch = build_train_step(cfg, mesh, shape, policy)
+        return fn, (state, batch)
+    if shape.kind == "prefill":
+        fn, params, batch = build_prefill_step(cfg, mesh, shape, policy)
+        return fn, (params, batch)
+    fn, params, cache, batch = build_decode_step(cfg, mesh, shape, policy)
+    return fn, (params, cache, batch)

@@ -1,0 +1,49 @@
+"""Model API: family dispatch between the transformer zoo and the paper's
+LeNet backbone.  All entry points are pure functions over param pytrees.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def is_conv(cfg: ModelConfig) -> bool:
+    return cfg.is_conv
+
+
+def init_params(cfg, key):
+    if cfg.is_conv:
+        from repro.models import lenet
+        return lenet.init_params(cfg, key)
+    from repro.models import transformer
+    return transformer.init_params(cfg, key)
+
+
+def client_forward(cfg, client_params, inputs, extras=None, **kw):
+    if cfg.is_conv:
+        from repro.models import lenet
+        return lenet.client_forward(cfg, client_params, inputs, extras, **kw)
+    from repro.models import transformer
+    return transformer.client_forward(cfg, client_params, inputs, extras, **kw)
+
+
+def server_forward(cfg, server_params, acts, tokens=None, extras=None,
+                   **kw):
+    if cfg.is_conv:
+        from repro.models import lenet
+        return lenet.server_forward(cfg, server_params, acts, tokens,
+                                    extras, **kw)
+    from repro.models import transformer
+    return transformer.server_forward(cfg, server_params, acts, tokens,
+                                      extras, **kw)
+
+
+def forward(cfg, params, inputs, extras=None, **kw):
+    """Composed client+server forward -> (logits, aux)."""
+    acts = client_forward(cfg, params["client"], inputs, extras,
+                          **{k: v for k, v in kw.items() if k != "gates"})
+    if cfg.is_conv:
+        return server_forward(cfg, params["server"], acts, None, extras,
+                              **kw)
+    return server_forward(cfg, params["server"], acts, inputs, extras, **kw)

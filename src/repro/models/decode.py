@@ -1,0 +1,245 @@
+"""Inference paths: cache init, prefill (cache-building forward) and
+single-token decode over the composed client+server model.
+
+Cache layout (decoder-only archs):
+  {"client": [seg0_cache, ...], "server": [...]}
+each segment cache is a pytree with leading n_rep dim, keyed "0".."P-1"
+per body position, each entry {"mixer": ...} (+"cross_k"/"cross_v" for
+enc-dec decoder layers).  Windowed attention caches are ring buffers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_norm, embed, unembed, vocab_pad_bias
+from repro.models.transformer import (LayerDesc, Segment, apply_layer,
+                                      model_plan, run_segments_decode,
+                                      _client_inputs, _positions_for,
+                                      _gate_or_none, _unit_gate)
+import repro.models.mlp as mlp_mod
+import repro.models.moe as moe_mod
+
+
+def _seg_cache(cfg, seg: Segment, batch, cache_len, dtype, window, src_len):
+    def one(desc: LayerDesc):
+        c: Dict[str, Any] = {}
+        if desc.mixer == "attn":
+            L = min(cache_len, window) if window else cache_len
+            c["mixer"] = attn.init_kv_cache(cfg, batch, L, dtype)
+        else:
+            c["mixer"] = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+        if desc.cross:
+            c["cross_k"] = jnp.zeros((batch, src_len, cfg.n_kv_heads,
+                                      cfg.head_dim), dtype)
+            c["cross_v"] = jnp.zeros((batch, src_len, cfg.n_kv_heads,
+                                      cfg.head_dim), dtype)
+        return c
+    body = {str(j): one(d) for j, d in enumerate(seg.body)}
+    return jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (seg.n_rep,) + t.shape), body)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, *,
+               dtype=None, window: int = 0, src_len: int = 0):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    plan = model_plan(cfg)
+    if cfg.is_encoder_decoder:
+        return {"server": [
+            _seg_cache(cfg, s, batch, cache_len, dtype, window, src_len)
+            for s in plan["server_dec_segments"]]}
+    return {
+        "client": [_seg_cache(cfg, s, batch, cache_len, dtype, window, 0)
+                   for s in plan["client_segments"]],
+        "server": [_seg_cache(cfg, s, batch, cache_len, dtype, window, 0)
+                   for s in plan["server_segments"]],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def _ring_arrange(k_full, window, cache_len):
+    """Arrange prefill K/V (B,S,H,hd) into the decode cache layout.
+
+    Windowed: last `window` positions in ring-slot order.  Full: padded
+    with zero rows up to ``cache_len`` so decode can append.
+    """
+    S = k_full.shape[1]
+    if window and S > window:
+        last = k_full[:, S - window:]
+        slots = (jnp.arange(window) + (S - window)) % window
+        return jnp.zeros_like(last).at[:, slots].set(last)
+    L = max(cache_len, S) if not window else max(window, S)
+    if L > S:
+        pad = jnp.zeros((k_full.shape[0], L - S) + k_full.shape[2:],
+                        k_full.dtype)
+        return jnp.concatenate([k_full, pad], axis=1)
+    return k_full
+
+
+def run_segments_prefill(cfg, segments, seg_params, x, *, positions,
+                         window=0, gates=None, cross=None, chunked=None,
+                         cache_len=0, qkv_shard=None, attn_out_shard=None):
+    """Like run_segments but also emits per-layer caches."""
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+    dtype = x.dtype
+    for si, (seg, sp) in enumerate(zip(segments, seg_params)):
+        g_seg = gates[si] if gates is not None else None
+
+        def body(carry, xs):
+            xc, auxc = carry
+            lp, lg = xs
+            lc = {}
+            for j, desc in enumerate(seg.body):
+                p = lp[j]
+                g = lg[str(j)] if lg is not None else None
+                h = apply_norm(p["norm1"], xc, cfg.norm)
+                c: Dict[str, Any] = {}
+                if desc.mixer == "attn":
+                    out, (k, v) = attn.attn_forward(
+                        p["mixer"], h, cfg, positions=positions,
+                        causal=desc.causal, window=window, chunked=chunked,
+                        qkv_shard=qkv_shard, out_shard=attn_out_shard,
+                        head_gate=_gate_or_none(g, "mixer"))
+                    c["mixer"] = {"k": _ring_arrange(k, window, cache_len),
+                                  "v": _ring_arrange(v, window, cache_len)}
+                else:
+                    out, st = ssm_mod.mamba_forward(
+                        p["mixer"], h, cfg,
+                        unit_gate=_unit_gate(_gate_or_none(g, "mixer"), dtype),
+                        return_state=True)
+                    c["mixer"] = st
+                xc = xc + out
+                if desc.cross:
+                    hh = apply_norm(p["norm_x"], xc, cfg.norm)
+                    ck, cv = attn.cross_kv(p["cross"], cross, cfg, dtype)
+                    out, _ = attn.attn_forward(p["cross"], hh, cfg,
+                                               positions=None,
+                                               kv_override=(ck, cv))
+                    xc = xc + out
+                    c["cross_k"], c["cross_v"] = ck, cv
+                if desc.ffn == "dense":
+                    hh = apply_norm(p["norm2"], xc, cfg.norm)
+                    xc = xc + mlp_mod.mlp_forward(
+                        p["ffn"], hh,
+                        unit_gate=_unit_gate(_gate_or_none(g, "ffn"), dtype))
+                elif desc.ffn == "moe":
+                    hh = apply_norm(p["norm2"], xc, cfg.norm)
+                    y, a = moe_mod.moe_forward(
+                        p["ffn"], hh, cfg,
+                        expert_gate=_gate_or_none(g, "ffn"))
+                    xc = xc + y
+                    auxc = auxc + a
+                lc[str(j)] = c
+            return (xc, auxc), lc
+
+        if seg.n_rep == 1:
+            first = lambda t: jax.tree.map(lambda a: a[0], t)
+            (x, aux_total), lc = body(
+                (x, aux_total),
+                (first(sp), first(g_seg) if g_seg is not None else None))
+            caches.append(jax.tree.map(lambda a: a[None], lc))
+        else:
+            if g_seg is None:
+                (x, aux_total), lc = jax.lax.scan(
+                    lambda cr, lp: body(cr, (lp, None)), (x, aux_total), sp)
+            else:
+                (x, aux_total), lc = jax.lax.scan(body, (x, aux_total),
+                                                  (sp, g_seg))
+            caches.append(lc)
+    return x, aux_total, caches
+
+
+def prefill(cfg: ModelConfig, params, tokens, extras=None, *, gates=None,
+            window: int = 0, dtype=None, chunked=None, cache_len: int = 0,
+            qkv_shard=None, attn_out_shard=None):
+    """Build cache from a prompt.  Returns (last_logits, cache)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    plan = model_plan(cfg)
+    pc, ps = params["client"], params["server"]
+    if cfg.is_encoder_decoder:
+        # encode src, then prime the decoder with the BOS token(s)
+        src = _client_inputs(cfg, pc, tokens, extras, dtype)
+        from repro.models.transformer import run_segments
+        enc, _ = run_segments(cfg, plan["client_segments"], pc["segments"],
+                              src, positions=None, chunked=chunked)
+        enc, _ = run_segments(cfg, plan["server_enc_segments"],
+                              ps["enc_segments"], enc, positions=None,
+                              chunked=chunked)
+        enc = apply_norm(ps["enc_final_norm"], enc, cfg.norm)
+        x = embed(ps["dec_embed"], tokens[:, :1] * 0, dtype)  # BOS
+        positions = jnp.zeros((tokens.shape[0], 1), jnp.int32)
+        x, _, caches = run_segments_prefill(
+            cfg, plan["server_dec_segments"], ps["segments"], x,
+            positions=positions, window=window, gates=gates, cross=enc,
+            cache_len=cache_len or tokens.shape[1] + 64)
+        x = apply_norm(ps["final_norm"], x, cfg.norm)
+        logits = unembed(ps["lm_head"], x[:, -1:])
+        logits = logits + vocab_pad_bias(cfg.vocab_size, cfg.padded_vocab())
+        return logits, {"server": caches}
+
+    positions = _positions_for(cfg, tokens, extras)
+    x = _client_inputs(cfg, pc, tokens, extras, dtype)
+    cache_len = cache_len or tokens.shape[1] + 64
+    x, _, c_caches = run_segments_prefill(
+        cfg, plan["client_segments"], pc["segments"], x,
+        positions=positions, window=window, chunked=chunked,
+        cache_len=cache_len, qkv_shard=qkv_shard,
+        attn_out_shard=attn_out_shard)
+    x, _, s_caches = run_segments_prefill(
+        cfg, plan["server_segments"], ps["segments"], x,
+        positions=positions, window=window, gates=gates, chunked=chunked,
+        cache_len=cache_len, qkv_shard=qkv_shard,
+        attn_out_shard=attn_out_shard)
+    x = apply_norm(ps["final_norm"], x, cfg.norm)
+    logits = unembed(ps["lm_head"], x[:, -1:])
+    logits = logits + vocab_pad_bias(cfg.vocab_size, cfg.padded_vocab())
+    return logits, {"client": c_caches, "server": s_caches}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, pos, *, gates=None,
+                window: int = 0, dtype=None):
+    """One token for the whole (composed) model.
+
+    token: (B, 1) int32; pos: scalar int32 current position.
+    gates apply to the server segments only (AdaSplit per-client masks).
+    Returns (logits (B,1,V), new_cache).
+    """
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    plan = model_plan(cfg)
+    pc, ps = params["client"], params["server"]
+    if cfg.is_encoder_decoder:
+        x = embed(ps["dec_embed"], token, dtype)
+        x, _, dec_c = run_segments_decode(
+            cfg, plan["server_dec_segments"], ps["segments"], x,
+            cache["server"], pos, window=window, gates=gates)
+        x = apply_norm(ps["final_norm"], x, cfg.norm)
+        logits = unembed(ps["lm_head"], x)
+        logits = logits + vocab_pad_bias(cfg.vocab_size, cfg.padded_vocab())
+        return logits, {"server": dec_c}
+
+    x = embed(pc["embed"], token, dtype)
+    x, _, c_caches = run_segments_decode(
+        cfg, plan["client_segments"], pc["segments"], x, cache["client"],
+        pos, window=window)
+    x, _, s_caches = run_segments_decode(
+        cfg, plan["server_segments"], ps["segments"], x, cache["server"],
+        pos, window=window, gates=gates)
+    x = apply_norm(ps["final_norm"], x, cfg.norm)
+    logits = unembed(ps["lm_head"], x)
+    logits = logits + vocab_pad_bias(cfg.vocab_size, cfg.padded_vocab())
+    return logits, {"client": c_caches, "server": s_caches}

@@ -1,0 +1,120 @@
+"""Shared layer primitives: norms, embeddings, RoPE / M-RoPE, projections.
+
+All layers are pure functions over param pytrees (dicts of jnp arrays);
+initialisers take an explicit PRNG key.  Compute dtype is the caller's:
+params are cast at the call-site (see transformer.forward).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else (1.0 / np.sqrt(d_in))
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(d, kind: str):
+    if kind == "rms":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "ln":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if kind == "nonparam_ln":  # olmo: no learned affine
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        y = y * params["scale"]
+    else:  # ln / nonparam_ln
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if kind == "ln":
+            y = y * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Multimodal RoPE (Qwen2-VL).
+
+    x: (..., S, H, hd); positions3: (..., S, 3) — (t, h, w) position ids.
+    ``sections`` partitions the half-dim; each section rotates with its own
+    position stream.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(hd, theta)                        # (half,)
+    # build per-frequency position selector: section s uses positions3[..., s]
+    sec_id = np.concatenate([np.full((s,), i) for i, s in enumerate(sections)])
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(jnp.asarray(sec_id), positions3.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )                                                    # (..., S, half)
+    ang = pos * freqs                                    # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key, vocab_padded, d_model):
+    return {"table": jax.random.normal(key, (vocab_padded, d_model),
+                                       jnp.float32) * 0.02}
+
+
+def embed(params, tokens, dtype):
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params, x, tied_table=None):
+    """x: (..., D) -> logits (..., Vpad).  float32 logits."""
+    table = tied_table if tied_table is not None else params["table"]
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+def vocab_pad_bias(vocab_size: int, vocab_padded: int) -> jnp.ndarray:
+    """Additive logit bias masking padded vocab rows."""
+    bias = np.zeros((vocab_padded,), np.float32)
+    bias[vocab_size:] = -1e9
+    return jnp.asarray(bias)

@@ -1,0 +1,109 @@
+"""The paper's own backbone: LeNet-style CNN (AdaSplit §4.4), with the
+client/server split used by all paper-faithful benchmarks.
+
+Each conv block = 5x5 conv (same) + ReLU + 2x2 maxpool.  Client owns the
+bottom ``split`` blocks, server the rest plus the FC head.  Server unit
+gates (AdaSplit structured masks) act on conv output channels and FC
+hidden units; the per-scalar paper-faithful mask path is handled by the
+optimizer (core/masks.py) instead.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv_init(key, cin, cout, k=5):
+    w = jax.random.normal(key, (k, k, cin, cout)) * jnp.sqrt(2.0 / (k * k * cin))
+    return {"w": w, "b": jnp.zeros((cout,))}
+
+
+def _conv_block(p, x, gate=None):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y + p["b"].astype(x.dtype))
+    if gate is not None:
+        g = gate.astype(x.dtype)
+        y = y * (g[None, None, None, :] if g.ndim == 1 else g[:, None, None, :])
+    return jax.lax.reduce_window(y, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def split_index(cfg) -> int:
+    return max(1, int(round(cfg.mu * len(cfg.conv_channels))))
+
+
+def init_client_params(cfg, key):
+    s = split_index(cfg)
+    cin = 3
+    blocks = []
+    for i, c in enumerate(cfg.conv_channels[:s]):
+        blocks.append(_conv_init(jax.random.fold_in(key, i), cin, c))
+        cin = c
+    return {"blocks": blocks}
+
+
+def init_server_params(cfg, key):
+    s = split_index(cfg)
+    cin = cfg.conv_channels[s - 1]
+    blocks = []
+    for i, c in enumerate(cfg.conv_channels[s:]):
+        blocks.append(_conv_init(jax.random.fold_in(key, i), cin, c))
+        cin = c
+    spatial = cfg.image_size // (2 ** len(cfg.conv_channels))
+    flat = max(spatial, 1) ** 2 * cfg.conv_channels[-1]
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(key, 99), 3)
+    return {
+        "blocks": blocks,
+        "fc1": {"w": jax.random.normal(k1, (flat, 120)) * jnp.sqrt(2.0 / flat),
+                "b": jnp.zeros((120,))},
+        "fc2": {"w": jax.random.normal(k2, (120, cfg.d_model)) * jnp.sqrt(2.0 / 120),
+                "b": jnp.zeros((cfg.d_model,))},
+        "head": {"w": jax.random.normal(k3, (cfg.d_model, cfg.n_classes)) * 0.05,
+                 "b": jnp.zeros((cfg.n_classes,))},
+    }
+
+
+def init_params(cfg, key):
+    kc, ks = jax.random.split(key)
+    return {"client": init_client_params(cfg, kc),
+            "server": init_server_params(cfg, ks)}
+
+
+def client_forward(cfg, p, images, extras=None, *, dtype=None, **_):
+    x = images.astype(dtype or jnp.float32)
+    for bp in p["blocks"]:
+        x = _conv_block(bp, x)
+    return x  # split activations (B, H', W', C)
+
+
+def server_forward(cfg, p, acts, tokens=None, extras=None, *, gates=None,
+                   **_):
+    """gates: {"blocks": [(C,) or (B,C) ...], "fc1": ..., "fc2": ...}"""
+    x = acts
+    for i, bp in enumerate(p["blocks"]):
+        g = gates["blocks"][i] if gates is not None else None
+        x = _conv_block(bp, x, gate=g)
+    x = x.reshape(x.shape[0], -1)
+
+    def fc(pp, x, gate, act=True):
+        y = x @ pp["w"].astype(x.dtype) + pp["b"].astype(x.dtype)
+        if act:
+            y = jax.nn.relu(y)
+        if gate is not None:
+            g = gate.astype(x.dtype)
+            y = y * (g[None, :] if g.ndim == 1 else g)
+        return y
+
+    x = fc(p["fc1"], x, gates["fc1"] if gates is not None else None)
+    x = fc(p["fc2"], x, gates["fc2"] if gates is not None else None)
+    logits = fc(p["head"], x, None, act=False)
+    return logits.astype(jnp.float32), jnp.zeros((), jnp.float32)
+
+
+def forward(cfg, params, images, **kw):
+    acts = client_forward(cfg, params["client"], images)
+    return server_forward(cfg, params["server"], acts, **kw)

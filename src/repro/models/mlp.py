@@ -1,0 +1,28 @@
+"""SwiGLU MLP (gate/up/down)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def mlp_init(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff),
+        "w_up": dense_init(k2, d_model, d_ff),
+        "w_down": dense_init(k3, d_ff, d_model),
+    }
+
+
+def mlp_forward(p, x, unit_gate=None):
+    """unit_gate: optional (d_ff,) or broadcastable mask on the hidden
+    units — AdaSplit's structured per-client server mask applied in
+    activation space (row-mask of w_down / col-mask of w_gate,w_up).
+    """
+    dtype = x.dtype
+    h = jax.nn.silu(x @ p["w_gate"].astype(dtype)) * (x @ p["w_up"].astype(dtype))
+    if unit_gate is not None:
+        h = h * unit_gate.astype(dtype)
+    return h @ p["w_down"].astype(dtype)

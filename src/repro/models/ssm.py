@@ -1,0 +1,201 @@
+"""Mamba2 block — SSD (state-space duality) chunked algorithm.
+
+Faithful to the minimal SSD reference (arXiv:2405.21060 listing 1), in
+JAX: intra-chunk "attention" term + inter-chunk recurrence carried with a
+``lax.scan`` (sequential over S/chunk steps, which keeps the HLO small
+and is the TPU-native formulation — the MXU eats the intra-chunk
+einsums, the scan carries the (H, P, N) state).
+
+Single-token decode is the plain SSM recurrence on a carried state —
+O(H·P·N) per step, which is what makes long_500k decode native for this
+family.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def _conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def mamba_init(key, cfg):
+    d, din = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    k = cfg.ssm_conv_kernel
+    proj_out = 2 * din + 2 * G * N + H  # z, xBC, dt
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, proj_out),
+        "conv_w": jax.random.normal(ks[1], (_conv_dim(cfg), k)) * 0.1,
+        "conv_b": jnp.zeros((_conv_dim(cfg),)),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,)),
+        "dt_bias": jnp.zeros((H,)),
+        "norm_scale": jnp.ones((din,)),
+        "out_proj": dense_init(ks[2], din, d),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B, L, C); w: (C, K)."""
+    K = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[:, i] for i in range(K))
+    return out + b
+
+
+def _segsum(a):
+    """a: (..., L) -> (..., L, L) with [i,j] = sum_{j<k<=i} a_k, -inf above
+    the diagonal."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x:  (B, L, H, P)    inputs (pre-dt)
+    dt: (B, L, H)       discretisation steps (post-softplus)
+    A:  (H,)            negative decay rates
+    Bm, Cm: (B, L, G, N) input/output projections (groups broadcast to H)
+    Returns (y, final_state) with y (B, L, H, P), state (B, H, P, N).
+    """
+    Bb, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    rep = H // G
+
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+    a = (dt * A).astype(jnp.float32)                       # (B, L, H), <= 0
+    Bg = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)   # (B, L, H, N)
+    Cg = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+
+    # chunked views, scan axis first
+    def chunked(t, extra=()):  # (B, L, ...) -> (nc, B, chunk, ...)
+        return t.reshape((Bb, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    xc, ac, Bc, Cc = map(chunked, (xdt, a, Bg, Cg))
+
+    if initial_state is None:
+        initial_state = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def body(state, inp):
+        xk, ak, Bk, Ck = inp                   # (B, chunk, H, ...)
+        a_t = ak.swapaxes(1, 2)                # (B, H, chunk)
+        a_cum = jnp.cumsum(a_t, axis=-1)       # inclusive
+        Lmat = jnp.exp(_segsum(a_t))           # (B, H, q, k)
+        # intra-chunk
+        y_diag = jnp.einsum("blhn,bshn,bhls,bshp->blhp", Ck, Bk, Lmat, xk)
+        # contribution of entering state
+        state_decay = jnp.exp(a_cum)           # (B, H, chunk)
+        y_off = jnp.einsum("blhn,bhpn,bhl->blhp", Ck, state, state_decay)
+        # chunk state update
+        decay_states = jnp.exp(a_cum[..., -1:] - a_cum)   # (B, H, chunk)
+        chunk_state = jnp.einsum("blhn,bhl,blhp->bhpn", Bk, decay_states, xk)
+        new_state = state * jnp.exp(a_cum[..., -1])[..., None, None] \
+            + chunk_state
+        return new_state, y_diag + y_off
+
+    final_state, ys = jax.lax.scan(body, initial_state, (xc, ac, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(Bb, L, H, P)
+    return y, final_state
+
+
+def mamba_forward(p, x, cfg, unit_gate: Optional[jnp.ndarray] = None,
+                  return_state: bool = False):
+    """Full-sequence forward.  x: (B, L, D)."""
+    dtype = x.dtype
+    Bb, L, D = x.shape
+    din, G, N, H, P = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                       cfg.ssm_nheads, cfg.ssm_headdim)
+    chunk = min(cfg.ssm_chunk, L)
+    while L % chunk:
+        chunk //= 2
+
+    zxbcdt = x @ p["in_proj"].astype(dtype)
+    z, xBC_raw, dt_raw = jnp.split(zxbcdt, [din, 2 * din + 2 * G * N],
+                                   axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC_raw, p["conv_w"].astype(dtype),
+                                   p["conv_b"].astype(dtype)))
+    xs, Bm, Cm = jnp.split(xBC, [din, din + G * N], axis=-1)
+    xs = xs.reshape(Bb, L, H, P)
+    Bm = Bm.reshape(Bb, L, G, N)
+    Cm = Cm.reshape(Bb, L, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, state = ssd_chunked(xs, dt, A, Bm, Cm, chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(Bb, L, din).astype(dtype)
+
+    # gated RMSNorm
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    g = (gf * jax.lax.rsqrt(jnp.mean(gf * gf, -1, keepdims=True) + 1e-6)
+         * p["norm_scale"]).astype(dtype)
+    if unit_gate is not None:
+        g = g * unit_gate.astype(dtype)
+    out = g @ p["out_proj"].astype(dtype)
+    if return_state:
+        K = cfg.ssm_conv_kernel
+        conv_tail = xBC_raw[:, L - (K - 1):, :]  # raw pre-conv values
+        return out, {"state": state, "conv": conv_tail}
+    return out
+
+
+def init_ssm_cache(cfg, batch, dtype):
+    H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    K = cfg.ssm_conv_kernel
+    return {
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, _conv_dim(cfg)), dtype),
+    }
+
+
+def mamba_decode(p, x, cache, cfg, unit_gate: Optional[jnp.ndarray] = None):
+    """One-token step.  x: (B, 1, D) -> (out (B,1,D), new_cache)."""
+    dtype = x.dtype
+    Bb = x.shape[0]
+    din, G, N, H, P = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                       cfg.ssm_nheads, cfg.ssm_headdim)
+    zxbcdt = x[:, 0] @ p["in_proj"].astype(dtype)          # (B, proj)
+    z, xBC, dt_raw = jnp.split(zxbcdt, [din, 2 * din + 2 * G * N], axis=-1)
+
+    # conv ring: window = concat(conv_cache, new)
+    win = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,ck->bc", win.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out).astype(dtype)
+    new_conv = win[:, 1:, :]
+
+    xs, Bm, Cm = jnp.split(xBC, [din, din + G * N], axis=-1)
+    xs = xs.reshape(Bb, H, P).astype(jnp.float32)
+    Bm = jnp.repeat(Bm.reshape(Bb, G, N), H // G, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(Cm.reshape(Bb, G, N), H // G, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+
+    decay = jnp.exp(dt * A)                                 # (B, H)
+    state = cache["state"] * decay[..., None, None] \
+        + jnp.einsum("bh,bhp,bhn->bhpn", dt, xs, Bm)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Cm) + xs * p["D"][:, None]
+    y = y.reshape(Bb, din).astype(dtype)
+
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    g = (gf * jax.lax.rsqrt(jnp.mean(gf * gf, -1, keepdims=True) + 1e-6)
+         * p["norm_scale"]).astype(dtype)
+    if unit_gate is not None:
+        g = g * unit_gate.astype(dtype)
+    out = (g @ p["out_proj"].astype(dtype))[:, None, :]
+    return out, {"state": state, "conv": new_conv}

@@ -1,0 +1,524 @@
+"""Composable decoder / encoder-decoder stack over all assigned families.
+
+The stack is organised into **segments**: maximal runs of layers whose
+(mixer, ffn) pattern repeats with period P (= lcm of the attention and
+MoE interleave periods).  Each segment scans over its repetitions with
+stacked params, so the lowered HLO contains each distinct layer body
+once regardless of depth — this is what keeps 80-layer dry-run compiles
+tractable and is the production idiom (cf. MaxText).
+
+AdaSplit's client/server split slices the stack at ``cfg.split_layer``
+(block-aligned for hybrids) and re-segments each side.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_norm, dense_init, embed,
+                                 embedding_init, norm_init, unembed,
+                                 vocab_pad_bias)
+
+
+# ---------------------------------------------------------------------------
+# Segment plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerDesc:
+    mixer: str          # "attn" | "ssm"
+    ffn: str            # "dense" | "moe" | "none"
+    cross: bool = False  # decoder cross-attention
+    causal: bool = True
+
+
+@dataclass(frozen=True)
+class Segment:
+    n_rep: int
+    body: Tuple[LayerDesc, ...]
+
+
+def _desc(cfg: ModelConfig, i: int, *, decoder=False, encoder=False) -> LayerDesc:
+    if encoder:
+        return LayerDesc("attn", "dense", cross=False, causal=False)
+    if decoder and cfg.is_encoder_decoder:
+        return LayerDesc("attn", "dense", cross=True, causal=True)
+    mixer = "attn" if (cfg.n_heads and cfg.is_attn_layer(i)) else "ssm"
+    if cfg.is_moe_layer(i):
+        ffn = "moe"
+    elif cfg.d_ff:
+        ffn = "dense"
+    else:
+        ffn = "none"
+    return LayerDesc(mixer, ffn)
+
+
+def build_segments(cfg: ModelConfig, start: int, end: int,
+                   *, decoder=False, encoder=False) -> List[Segment]:
+    """Segment plan for layers [start, end)."""
+    if start >= end:
+        return []
+    segs: List[Segment] = []
+    i = start
+    # unrolled prefix for first_k_dense irregularity
+    while i < min(end, cfg.first_k_dense) and not (decoder or encoder):
+        segs.append(Segment(1, (_desc(cfg, i),)))
+        i += 1
+    P = 1
+    for p in (cfg.attn_layer_period, cfg.moe_layer_period):
+        if p and p > 1:
+            P = P * p // math.gcd(P, p)
+    n = end - i
+    if n <= 0:
+        return segs
+    n_rep, tail = divmod(n, P)
+    if n_rep:
+        body = tuple(_desc(cfg, i + k, decoder=decoder, encoder=encoder)
+                     for k in range(P))
+        segs.append(Segment(n_rep, body))
+        i += n_rep * P
+    for k in range(tail):
+        segs.append(Segment(1, (_desc(cfg, i + k, decoder=decoder,
+                                      encoder=encoder),)))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Param init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig, desc: LayerDesc):
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": norm_init(cfg.d_model, cfg.norm)}
+    if desc.mixer == "attn":
+        p["mixer"] = attn.attention_init(ks[0], cfg)
+    else:
+        p["mixer"] = ssm_mod.mamba_init(ks[0], cfg)
+    if desc.cross:
+        p["norm_x"] = norm_init(cfg.d_model, cfg.norm)
+        p["cross"] = attn.attention_init(ks[1], cfg)
+    if desc.ffn != "none":
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm)
+        if desc.ffn == "moe":
+            p["ffn"] = moe_mod.moe_init(ks[2], cfg)
+        else:
+            d_ff = cfg.d_ff
+            p["ffn"] = mlp_mod.mlp_init(ks[2], cfg.d_model, d_ff)
+    return p
+
+
+def segment_init(key, cfg: ModelConfig, seg: Segment):
+    """Stacked params with leading n_rep dim."""
+    reps = []
+    for r in range(seg.n_rep):
+        kr = jax.random.fold_in(key, r)
+        body = [_layer_init(jax.random.fold_in(kr, j), cfg, d)
+                for j, d in enumerate(seg.body)]
+        reps.append(body)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+
+
+# ---------------------------------------------------------------------------
+# Layer apply
+# ---------------------------------------------------------------------------
+
+
+def _gate_or_none(gates, name):
+    if gates is None:
+        return None
+    return gates.get(name)
+
+
+def _unit_gate(gate, dtype):
+    if gate is None:
+        return None
+    g = gate.astype(dtype)
+    return g if g.ndim == 1 else g[:, None, :]
+
+
+def apply_layer(cfg: ModelConfig, p, desc: LayerDesc, x, *,
+                positions=None, window=0, gates=None, cross=None,
+                chunked=None, qkv_shard=None, attn_out_shard=None,
+                constrain=None, moe_constrain=None):
+    """Full-sequence layer.  Returns (x, aux).
+
+    constrain: residual-layout pin applied after EVERY sublayer add —
+    without it, a batch-over-model attention pin propagates through the
+    scan carry into the FFN and triggers XLA's replicate-everything
+    fallback (§Perf pair-1 it3).
+    """
+    dtype = x.dtype
+    pin = constrain if constrain is not None else (lambda t: t)
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if desc.mixer == "attn":
+        out, _ = attn.attn_forward(p["mixer"], h, cfg, positions=positions,
+                                   causal=desc.causal, window=window,
+                                   chunked=chunked, qkv_shard=qkv_shard,
+                                   out_shard=attn_out_shard,
+                                   head_gate=_gate_or_none(gates, "mixer"))
+    else:
+        out = ssm_mod.mamba_forward(
+            p["mixer"], h, cfg,
+            unit_gate=_unit_gate(_gate_or_none(gates, "mixer"), dtype))
+    x = pin(x + out)
+    if desc.cross:
+        # cross: raw encoder states — each decoder layer projects its own
+        # K/V with its cross weights.
+        h = apply_norm(p["norm_x"], x, cfg.norm)
+        ck, cv = attn.cross_kv(p["cross"], cross, cfg, dtype)
+        out, _ = attn.attn_forward(p["cross"], h, cfg, positions=None,
+                                   kv_override=(ck, cv))
+        x = pin(x + out)
+    if desc.ffn == "dense":
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        x = pin(x + mlp_mod.mlp_forward(
+            p["ffn"], h,
+            unit_gate=_unit_gate(_gate_or_none(gates, "ffn"), dtype)))
+    elif desc.ffn == "moe":
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        ep_pins = None
+        if moe_constrain is not None:
+            # dispatch wants (batch-sharded, S-replicated): the S*K
+            # reshape shreds a sequence-sharded layout and GSPMD falls
+            # back to batch-replicated global dispatch buffers (§Perf
+            # pair-2 it1); ep pins make the expert-parallel schedule
+            # explicit (it2)
+            h = moe_constrain["h"](h)
+            ep_pins = (moe_constrain["ep_in"], moe_constrain["ep_out"])
+        y, a = moe_mod.moe_forward(p["ffn"], h, cfg,
+                                   expert_gate=_gate_or_none(gates, "ffn"),
+                                   ep_pins=ep_pins)
+        x = pin(x + y)
+        aux = aux + a
+    return x, aux
+
+
+def apply_layer_decode(cfg: ModelConfig, p, desc: LayerDesc, x, cache, pos, *,
+                       window=0, gates=None, cross=None):
+    """One-token layer step.  Returns (x, aux, new_cache)."""
+    dtype = x.dtype
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    new_cache = dict(cache)
+    if desc.mixer == "attn":
+        out, kv = attn.attn_decode(p["mixer"], h, cache["mixer"], pos, cfg,
+                                   window=window,
+                                   head_gate=_gate_or_none(gates, "mixer"))
+        new_cache["mixer"] = kv
+    else:
+        out, st = ssm_mod.mamba_decode(
+            p["mixer"], h, cache["mixer"], cfg,
+            unit_gate=_unit_gate(_gate_or_none(gates, "mixer"), dtype))
+        new_cache["mixer"] = st
+    x = x + out
+    if desc.cross:
+        h = apply_norm(p["norm_x"], x, cfg.norm)
+        out, _ = attn.attn_decode(p["cross"], h, None, pos, cfg,
+                                  kv_override=(cache["cross_k"],
+                                               cache["cross_v"]))
+        x = x + out
+    if desc.ffn == "dense":
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + mlp_mod.mlp_forward(
+            p["ffn"], h,
+            unit_gate=_unit_gate(_gate_or_none(gates, "ffn"), dtype))
+    elif desc.ffn == "moe":
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        y, a = moe_mod.moe_forward(p["ffn"], h, cfg,
+                                   expert_gate=_gate_or_none(gates, "ffn"))
+        x = x + y
+        aux = aux + a
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Segment runners (scan over n_rep)
+# ---------------------------------------------------------------------------
+
+
+def _body_gates(gates, j):
+    if gates is None:
+        return None
+    g = gates.get(str(j))
+    return g
+
+
+def run_segments(cfg, segments, seg_params, x, *, positions=None, window=0,
+                 gates=None, cross=None, chunked=None, remat=False,
+                 constrain=None, qkv_shard=None, attn_out_shard=None,
+                 moe_constrain=None):
+    """gates: optional list aligned with segments; each entry a pytree with
+    leading n_rep dims matching the segment params (see core/masks.py).
+
+    remat: checkpoint each scan-step body (training memory).
+    constrain: optional fn applied to the residual after every layer —
+    used by the launcher to pin a sequence-sharded layout (Megatron-SP).
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    if constrain is not None:
+        x = constrain(x)
+    # per-SUBLAYER pins are only needed to stop an attention layout pin
+    # leaking through the scan carry (§Perf pair-1 it3); without an
+    # active attention pin they are pure fusion barriers (+20% HBM on
+    # granite, measured) — so scope them to pinned runs.
+    sub_constrain = constrain if qkv_shard is not None else None
+    for si, (seg, sp) in enumerate(zip(segments, seg_params)):
+        g_seg = gates[si] if gates is not None else None
+
+        def body(carry, xs):
+            xc, auxc = carry
+            lp, lg = xs
+            for j, desc in enumerate(seg.body):
+                xc, a = apply_layer(cfg, lp[j], desc, xc,
+                                    positions=positions, window=window,
+                                    gates=lg[str(j)] if lg is not None else None,
+                                    cross=cross, chunked=chunked,
+                                    qkv_shard=qkv_shard,
+                                    attn_out_shard=attn_out_shard,
+                                    constrain=sub_constrain,
+                                    moe_constrain=moe_constrain)
+                if sub_constrain is None and constrain is not None:
+                    xc = constrain(xc)   # layer-end pin (baseline path)
+                auxc = auxc + a
+            return (xc, auxc), None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+
+        if seg.n_rep == 1:
+            (x, aux_total), _ = body(
+                (x, aux_total),
+                (jax.tree.map(lambda t: t[0], sp),
+                 jax.tree.map(lambda t: t[0], g_seg) if g_seg is not None else None))
+        else:
+            xs = (sp, g_seg) if g_seg is not None else (sp, None)
+            if g_seg is None:
+                (x, aux_total), _ = jax.lax.scan(
+                    lambda c, lp: body(c, (lp, None)), (x, aux_total), sp)
+            else:
+                (x, aux_total), _ = jax.lax.scan(
+                    body, (x, aux_total), (sp, g_seg))
+    return x, aux_total
+
+
+def run_segments_decode(cfg, segments, seg_params, x, caches, pos, *,
+                        window=0, gates=None):
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, (seg, sp, cache) in enumerate(zip(segments, seg_params, caches)):
+        g_seg = gates[si] if gates is not None else None
+
+        def body(carry, xs):
+            xc, auxc = carry
+            lp, lc, lg = xs
+            new_lc = {}
+            for j, desc in enumerate(seg.body):
+                xc, a, nc = apply_layer_decode(
+                    cfg, lp[j], desc, xc, lc[str(j)], pos, window=window,
+                    gates=lg[str(j)] if lg is not None else None)
+                new_lc[str(j)] = nc
+                auxc = auxc + a
+            return (xc, auxc), new_lc
+
+        if seg.n_rep == 1:
+            first = lambda t: jax.tree.map(lambda a: a[0], t)
+            (x, aux_total), nc = body(
+                (x, aux_total),
+                (first(sp), first(cache),
+                 first(g_seg) if g_seg is not None else None))
+            new_caches.append(jax.tree.map(lambda a: a[None], nc))
+        else:
+            if g_seg is None:
+                (x, aux_total), nc = jax.lax.scan(
+                    lambda c, xs: body(c, (xs[0], xs[1], None)),
+                    (x, aux_total), (sp, cache))
+            else:
+                (x, aux_total), nc = jax.lax.scan(
+                    body, (x, aux_total), (sp, cache, g_seg))
+            new_caches.append(nc)
+    return x, aux_total, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Whole-model params: client / server split
+# ---------------------------------------------------------------------------
+
+
+def model_plan(cfg: ModelConfig):
+    """Returns dict describing the client/server segment plans."""
+    if cfg.is_encoder_decoder:
+        s = cfg.split_layer
+        return {
+            "client_segments": build_segments(cfg, 0, s, encoder=True),
+            "server_enc_segments": build_segments(cfg, s, cfg.n_encoder_layers,
+                                                  encoder=True),
+            "server_dec_segments": build_segments(cfg, 0, cfg.n_layers,
+                                                  decoder=True),
+        }
+    s = cfg.split_layer
+    return {
+        "client_segments": build_segments(cfg, 0, s),
+        "server_segments": build_segments(cfg, s, cfg.n_layers),
+    }
+
+
+def init_client_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 8)
+    plan = model_plan(cfg)
+    p: Dict[str, Any] = {}
+    if cfg.modality == "text" or cfg.is_encoder_decoder is False:
+        p["embed"] = embedding_init(ks[0], cfg.padded_vocab(), cfg.d_model)
+    if cfg.modality in ("audio", "vision_text"):
+        # modality frontend STUB: precomputed frame/patch embeddings enter
+        # through a learned client-side projector.
+        p["frontend_proj"] = dense_init(ks[1], cfg.d_model, cfg.d_model)
+    segs = plan["client_segments"]
+    p["segments"] = [segment_init(jax.random.fold_in(ks[2], i), cfg, s)
+                     for i, s in enumerate(segs)]
+    return p
+
+
+def init_server_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 8)
+    plan = model_plan(cfg)
+    p: Dict[str, Any] = {"final_norm": norm_init(cfg.d_model, cfg.norm)}
+    if cfg.is_encoder_decoder:
+        p["enc_segments"] = [
+            segment_init(jax.random.fold_in(ks[0], i), cfg, s)
+            for i, s in enumerate(plan["server_enc_segments"])]
+        p["enc_final_norm"] = norm_init(cfg.d_model, cfg.norm)
+        p["dec_embed"] = embedding_init(ks[1], cfg.padded_vocab(), cfg.d_model)
+        p["segments"] = [
+            segment_init(jax.random.fold_in(ks[2], i), cfg, s)
+            for i, s in enumerate(plan["server_dec_segments"])]
+    else:
+        p["segments"] = [
+            segment_init(jax.random.fold_in(ks[2], i), cfg, s)
+            for i, s in enumerate(plan["server_segments"])]
+    # NOTE: the LM head is ALWAYS server-owned.  `tie_embeddings` is kept
+    # as model-card metadata, but tying across the client/server split
+    # would leak server weights to clients — incompatible with the SL
+    # protocol (recorded in DESIGN.md).
+    p["lm_head"] = embedding_init(ks[3], cfg.padded_vocab(), cfg.d_model)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    kc, ks = jax.random.split(key)
+    return {"client": init_client_params(cfg, kc),
+            "server": init_server_params(cfg, ks)}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _positions_for(cfg, tokens, extras):
+    B, S = tokens.shape
+    if cfg.mrope_sections:
+        if extras is not None and "positions" in extras:
+            return extras["positions"]             # (B, S, 3)
+        pos = jnp.arange(S)[None, :, None]
+        return jnp.broadcast_to(pos, (B, S, 3))
+    return jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+
+def _client_inputs(cfg, p, tokens, extras, dtype):
+    """Embed tokens (and splice modality embeddings for vlm / feed encoder
+    frames for audio)."""
+    if cfg.is_encoder_decoder:
+        # encoder input is the stubbed frame embeddings
+        src = extras["src_embeds"].astype(dtype)
+        return src @ p["frontend_proj"].astype(dtype)
+    x = embed(p["embed"], tokens, dtype)
+    if cfg.modality == "vision_text" and extras is not None \
+            and "vision_embeds" in extras:
+        ve = extras["vision_embeds"].astype(dtype)   # (B, F, D)
+        ve = ve @ p["frontend_proj"].astype(dtype)
+        F = ve.shape[1]
+        if x.shape[1] >= F:  # splice patch embeddings over the prefix
+            x = jnp.concatenate([ve, x[:, F:, :]], axis=1)
+    return x
+
+
+def client_forward(cfg: ModelConfig, p, tokens, extras=None, *,
+                   dtype=None, window=0, chunked=None, remat=False,
+                   constrain=None, qkv_shard=None, attn_out_shard=None,
+                   moe_constrain=None):
+    """Bottom (client) stack -> split activations (B, S, D)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    plan = model_plan(cfg)
+    x = _client_inputs(cfg, p, tokens, extras, dtype)
+    positions = None
+    if not cfg.is_encoder_decoder:
+        positions = _positions_for(cfg, tokens, extras)
+    x, _ = run_segments(cfg, plan["client_segments"], p["segments"], x,
+                        positions=positions, window=window, chunked=chunked,
+                        remat=remat, constrain=constrain,
+                        qkv_shard=qkv_shard, attn_out_shard=attn_out_shard,
+                        moe_constrain=moe_constrain)
+    return x
+
+
+def server_forward(cfg: ModelConfig, p, acts, tokens=None, extras=None, *,
+                   gates=None, window=0, chunked=None, remat=False,
+                   constrain=None, return_hidden=False, qkv_shard=None,
+                   attn_out_shard=None, moe_constrain=None):
+    """Server stack: split activations -> logits.  Returns (logits, aux).
+
+    gates: AdaSplit per-client structured masks (see core/masks.py), a
+    list aligned with the server segments.
+    return_hidden: skip the unembed and return the final-norm hidden
+    states instead — the launcher's chunked-CE path computes the loss
+    without ever materialising (B, S, Vpad) logits.
+    """
+    dtype = acts.dtype
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_encoder_decoder:
+        enc, a1 = run_segments(cfg, model_plan(cfg)["server_enc_segments"],
+                               p["enc_segments"], acts, positions=None,
+                               chunked=chunked, remat=remat,
+                               constrain=constrain)
+        enc = apply_norm(p["enc_final_norm"], enc, cfg.norm)
+        dec_tokens = tokens
+        x = embed(p["dec_embed"], dec_tokens, dtype)
+        positions = _positions_for(cfg, dec_tokens, extras)
+        # `cross` carries raw encoder states; each decoder layer projects
+        # its own K/V inside apply_layer.
+        x, a2 = run_segments(cfg, model_plan(cfg)["server_dec_segments"],
+                             p["segments"], x, positions=positions,
+                             window=window, gates=gates, cross=enc,
+                             chunked=chunked, remat=remat,
+                             constrain=constrain)
+        aux = a1 + a2
+        x = apply_norm(p["final_norm"], x, cfg.norm)
+    else:
+        plan = model_plan(cfg)
+        positions = None
+        if tokens is not None:
+            positions = _positions_for(cfg, tokens, extras)
+        x, aux = run_segments(cfg, plan["server_segments"], p["segments"],
+                              acts, positions=positions, window=window,
+                              gates=gates, chunked=chunked, remat=remat,
+                              constrain=constrain, qkv_shard=qkv_shard,
+                              attn_out_shard=attn_out_shard,
+                              moe_constrain=moe_constrain)
+        x = apply_norm(p["final_norm"], x, cfg.norm)
+    if return_hidden:
+        return x, aux
+    logits = unembed(p["lm_head"], x)
+    logits = logits + vocab_pad_bias(cfg.vocab_size, cfg.padded_vocab())
+    return logits, aux

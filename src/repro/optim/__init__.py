@@ -1,0 +1,3 @@
+from repro.optim.adam import adam_init, adam_update, Adam
+from repro.optim.sgd import sgd_init, sgd_update
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine

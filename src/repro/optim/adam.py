@@ -1,0 +1,78 @@
+"""Adam optimizer — pure JAX (container has no optax).
+
+Moments are kept in float32 regardless of param dtype (mixed-precision
+production layout: bf16 params + f32 optimizer state is selected by the
+caller's param dtype).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(f32, params),
+        "nu": jax.tree.map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(params, grads, state, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                weight_decay=0.0, grad_scale=None, mask=None):
+    """Returns (new_params, new_state).
+
+    mask: optional pytree of multiplicative gradient masks (AdaSplit
+    eq. 7 per-scalar path when masks are not folded into the forward).
+    """
+    step = state["step"] + 1
+    if mask is not None:
+        grads = jax.tree.map(lambda g, m: g * m.astype(g.dtype), grads, mask)
+    if grad_scale is not None:
+        grads = jax.tree.map(lambda g: g * grad_scale, grads)
+    b1t = 1.0 - b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / b1t
+        nhat = nu / b2t
+        delta = mhat / (jnp.sqrt(nhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}
+
+
+@dataclass
+class Adam:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        return adam_init(params)
+
+    def update(self, params, grads, state, lr=None, mask=None):
+        return adam_update(params, grads, state,
+                           lr=self.lr if lr is None else lr, b1=self.b1,
+                           b2=self.b2, eps=self.eps,
+                           weight_decay=self.weight_decay, mask=mask)

@@ -1,0 +1,24 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr, total_steps, final_frac=0.1):
+    def f(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return lr * (final_frac + (1 - final_frac)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return f
+
+
+def linear_warmup_cosine(lr, warmup, total_steps, final_frac=0.1):
+    cos = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+    def f(step):
+        w = jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, lr * w, cos(step - warmup))
+    return f

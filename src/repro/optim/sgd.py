@@ -1,0 +1,32 @@
+"""SGD (+momentum) — used by FL baselines (Scaffold/FedNova assume SGD
+local steps in their derivations)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum:
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)}
+    return {}
+
+
+def sgd_update(params, grads, state, *, lr, momentum: float = 0.0,
+               mask=None):
+    if mask is not None:
+        grads = jax.tree.map(lambda g, m: g * m.astype(g.dtype), grads, mask)
+    if momentum:
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            state["m"], grads)
+        new_p = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, new_m)
+        return new_p, {"m": new_m}
+    new_p = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return new_p, state

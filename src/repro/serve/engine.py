@@ -1,0 +1,164 @@
+"""Personalized batched serving engine.
+
+The AdaSplit inference story (§3.3) at service level: many clients, one
+shared server parameter store, each client served through its own
+folded ``M^s * m_i``.  The engine:
+
+* keeps an LRU cache of mask-folded server weights (folding is paid
+  once per client session, not per token — DESIGN.md §4);
+* groups queued requests BY CLIENT into decode batches (requests of the
+  same client share one effective model, so they can batch);
+* pads prompts to a shared length per batch, prefils once, then decodes
+  step-by-step with per-request stop handling.
+
+This is the framework's serving layer; ``examples/personalized_serving``
+shows the single-session path, tests cover scheduling invariants.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import masks as masks_mod
+from repro.models import decode as dec
+
+
+@dataclass
+class Request:
+    req_id: int
+    client_id: int
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 16
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+@dataclass
+class EngineStats:
+    requests: int = 0
+    tokens: int = 0
+    batches: int = 0
+    fold_hits: int = 0
+    fold_misses: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def tokens_per_s(self):
+        return self.tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def mean_batch_occupancy(self):
+        return self.requests / max(self.batches, 1)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, masks=None, *,
+                 max_batch: int = 8, fold_cache_size: int = 4,
+                 window: int = 0, binarize_threshold: float = 0.0):
+        self.cfg, self.params, self.masks = cfg, params, masks
+        self.max_batch = max_batch
+        self.window = window
+        self.binarize_threshold = binarize_threshold
+        self.queue: collections.deque = collections.deque()
+        self.stats = EngineStats()
+        self._fold_cache: "collections.OrderedDict[int, dict]" = \
+            collections.OrderedDict()
+        self._fold_cache_size = fold_cache_size
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _server_for(self, client_id: int):
+        """Mask-folded server weights, LRU-cached per client."""
+        if self.masks is None:
+            return self.params["server"]
+        if client_id in self._fold_cache:
+            self.stats.fold_hits += 1
+            self._fold_cache.move_to_end(client_id)
+            return self._fold_cache[client_id]
+        self.stats.fold_misses += 1
+        folded = masks_mod.fold_unit_masks(
+            self.cfg, self.params["server"], self.masks, client_id,
+            threshold=self.binarize_threshold)
+        self._fold_cache[client_id] = folded
+        if len(self._fold_cache) > self._fold_cache_size:
+            self._fold_cache.popitem(last=False)
+        return folded
+
+    def _next_batch(self) -> List[Request]:
+        """FIFO head's client, then every queued request of that client
+        up to max_batch (same effective model => batchable)."""
+        if not self.queue:
+            return []
+        head = self.queue[0]
+        batch, keep = [], collections.deque()
+        while self.queue and len(batch) < self.max_batch:
+            r = self.queue.popleft()
+            if r.client_id == head.client_id:
+                batch.append(r)
+            else:
+                keep.append(r)
+        while keep:
+            self.queue.appendleft(keep.pop())
+        return batch
+
+    # ------------------------------------------------------------------
+    def _run_batch(self, batch: List[Request]):
+        cfg = self.cfg
+        t0 = time.time()
+        params = {"client": self.params["client"],
+                  "server": self._server_for(batch[0].client_id)}
+        plen = max(len(r.prompt) for r in batch)
+        gen = max(r.max_new_tokens for r in batch)
+        prompts = np.zeros((len(batch), plen), np.int32)
+        for i, r in enumerate(batch):          # left-pad with token 0
+            prompts[i, plen - len(r.prompt):] = r.prompt
+        prompts = jnp.asarray(prompts)
+
+        cache_len = plen + gen + 1
+        extras = None
+        if cfg.is_encoder_decoder:
+            extras = {"src_embeds": jnp.zeros(
+                (len(batch), plen, cfg.d_model), jnp.bfloat16)}
+        logits, cache = dec.prefill(cfg, params, prompts, extras,
+                                    window=self.window,
+                                    cache_len=cache_len)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        outs = [tok]
+
+        @jax.jit
+        def step(params, cache, tok, pos):
+            lg, cache = dec.decode_step(cfg, params, tok, cache, pos,
+                                        window=self.window)
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32), cache
+
+        for t in range(gen - 1):
+            tok, cache = step(params, cache, tok,
+                              jnp.asarray(plen + t, jnp.int32))
+            outs.append(tok)
+        out = np.asarray(jnp.concatenate(outs, axis=1))
+        dt = time.time() - t0
+        for i, r in enumerate(batch):
+            r.output = out[i, : r.max_new_tokens]
+            r.latency_s = dt
+        self.stats.requests += len(batch)
+        self.stats.tokens += int(sum(r.max_new_tokens for r in batch))
+        self.stats.batches += 1
+        self.stats.wall_s += dt
+        return batch
+
+    def run_until_idle(self) -> List[Request]:
+        done: List[Request] = []
+        while self.queue:
+            batch = self._next_batch()
+            done.extend(self._run_batch(batch))
+        return done

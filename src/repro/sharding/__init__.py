@@ -1,0 +1,3 @@
+from repro.sharding.rules import (MeshAxes, client_pspecs, mask_pspecs,
+                                  opt_pspecs, server_pspecs, cache_pspecs,
+                                  batch_spec)

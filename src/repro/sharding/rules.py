@@ -1,0 +1,283 @@
+"""Sharding policy: param-pytree -> PartitionSpec pytree (DESIGN.md §5).
+
+Axes
+----
+``model``            Megatron tensor parallel (heads / ffn / experts /
+                     mamba channels / vocab).
+``data`` (+``pod``)  batch / client-cohort axis; AdaSplit client params
+                     carry a leading cohort dim sharded here.  FSDP /
+                     ZeRO additionally shard large leaves on this axis.
+
+Rules are matched on the (parent-key, leaf-key) path through the param
+pytree produced by ``repro.models``.  Every rule checks divisibility and
+falls back to replication — the dry-run must always lower.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    """Logical axis names for the active mesh."""
+    model: str = "model"
+    data: Tuple[str, ...] = ("data",)     # ("pod", "data") when multi-pod
+    model_size: int = 1
+    data_size: int = 1
+
+    @staticmethod
+    def from_mesh(mesh) -> "MeshAxes":
+        names = mesh.axis_names
+        data = tuple(n for n in names if n in ("pod", "data"))
+        dsz = int(np.prod([mesh.shape[n] for n in data])) if data else 1
+        msz = mesh.shape["model"] if "model" in names else 1
+        return MeshAxes(model="model" if "model" in names else None,
+                        data=data, model_size=msz, data_size=dsz)
+
+    @property
+    def data_spec(self):
+        return self.data if len(self.data) > 1 else (self.data[0] if self.data else None)
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for e in path:
+        if hasattr(e, "key"):
+            out.append(str(e.key))
+        elif hasattr(e, "idx"):
+            out.append(f"[{e.idx}]")
+        else:
+            out.append(str(e))
+    return tuple(out)
+
+
+def _div(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+# ---------------------------------------------------------------------------
+# Core rule: one leaf -> list of dim assignments
+# ---------------------------------------------------------------------------
+
+
+def _base_spec(keys: Tuple[str, ...], shape: Tuple[int, ...],
+               cfg: ModelConfig, ax: MeshAxes) -> list:
+    """Model-axis assignment per dim (list of axis-name-or-None)."""
+    spec: list = [None] * len(shape)
+    M = ax.model_size
+    if ax.model is None or M <= 1:
+        return spec
+    leaf = keys[-1]
+    parent = keys[-2] if len(keys) >= 2 else ""
+    gparent = keys[-3] if len(keys) >= 3 else ""
+
+    def set_dim(d, axis):
+        spec[d] = axis
+
+    # --- embeddings: shard padded vocab ---
+    if leaf == "table":
+        if _div(shape[-2], M):
+            set_dim(len(shape) - 2, ax.model)
+        return spec
+
+    # --- attention (incl. cross); leaf names are attention-specific ---
+    if parent in ("mixer", "cross") and leaf in ("wq", "wk", "wv", "wo",
+                                                 "bq", "bk", "bv"):
+        heads_ok = _div(cfg.n_heads, M)
+        kv_ok = _div(cfg.n_kv_heads, M)
+        if leaf in ("wq", "bq") and heads_ok:
+            set_dim(len(shape) - 1, ax.model)
+        elif leaf in ("wk", "wv", "bk", "bv") and heads_ok and kv_ok:
+            set_dim(len(shape) - 1, ax.model)
+        elif leaf == "wo" and heads_ok:
+            set_dim(len(shape) - 2, ax.model)
+        return spec
+
+    # --- mamba mixer; leaf names are ssm-specific ---
+    if parent == "mixer" and cfg.ssm_state:
+        din_ok = _div(cfg.d_inner, M) and _div(cfg.ssm_nheads, M)
+        if not din_ok:
+            return spec
+        if leaf == "in_proj":
+            # fused [z | xBC | dt] output — shard the fused dim; the
+            # downstream splits are model-sharded per component because
+            # every component width divides by M (checked above for
+            # d_inner/H; group/state widths are small and replicated by
+            # GSPMD where they don't).
+            set_dim(len(shape) - 1, ax.model)
+        elif leaf in ("conv_w", "conv_b"):
+            pass  # conv channels = din + 2GN, the 2GN tail breaks even
+                  # splits; replicated (small: C x K)
+        elif leaf in ("A_log", "D", "dt_bias"):
+            set_dim(len(shape) - 1, ax.model)
+        elif leaf == "norm_scale":
+            set_dim(len(shape) - 1, ax.model)
+        elif leaf == "out_proj":
+            set_dim(len(shape) - 2, ax.model)
+        return spec
+
+    # --- MoE ---
+    if parent == "ffn" and cfg.n_experts and leaf in ("w_gate", "w_up",
+                                                      "w_down"):
+        # stacked experts (.., E, D, F) — expert parallel on E
+        if len(shape) >= 3 and _div(shape[-3], M):
+            set_dim(len(shape) - 3, ax.model)
+        return spec
+    if leaf == "router":
+        return spec  # replicated: router logits feed a global top-k
+    if parent == "shared" or (gparent == "ffn" and parent == "shared"):
+        if leaf in ("w_gate", "w_up") and _div(shape[-1], M):
+            set_dim(len(shape) - 1, ax.model)
+        elif leaf == "w_down" and _div(shape[-2], M):
+            set_dim(len(shape) - 2, ax.model)
+        return spec
+
+    # --- dense MLP ---
+    if parent == "ffn":
+        if leaf in ("w_gate", "w_up") and _div(shape[-1], M):
+            set_dim(len(shape) - 1, ax.model)
+        elif leaf == "w_down" and _div(shape[-2], M):
+            set_dim(len(shape) - 2, ax.model)
+        return spec
+
+    # --- frontend projector (vlm/audio stub): column parallel ---
+    if leaf == "frontend_proj" and _div(shape[-1], M):
+        set_dim(len(shape) - 1, ax.model)
+        return spec
+
+    # norms, biases, lenet convs, projection heads: replicated
+    return spec
+
+
+def _add_fsdp(spec: list, shape: Tuple[int, ...], ax: MeshAxes,
+              *, skip_dims: Sequence[int] = (), min_size: int = 1 << 22
+              ) -> list:
+    """Additionally shard the largest free dim on the data axes (ZeRO /
+    FSDP).  Never touches the scan (n_rep) dim or already-sharded dims."""
+    if not ax.data or ax.data_size <= 1:
+        return spec
+    if int(np.prod(shape)) < min_size:
+        return spec
+    cands = [d for d in range(len(shape))
+             if spec[d] is None and d not in skip_dims
+             and _div(shape[d], ax.data_size)]
+    if not cands:
+        return spec
+    d = max(cands, key=lambda i: shape[i])
+    spec = list(spec)
+    spec[d] = ax.data_spec
+    return spec
+
+
+def _is_stacked(keys: Tuple[str, ...]) -> bool:
+    return any(k in ("segments", "enc_segments") for k in keys)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
+def server_pspecs(cfg: ModelConfig, params, ax: MeshAxes, *,
+                  fsdp: bool = False):
+    """PartitionSpecs for the server param tree."""
+    def one(path, leaf):
+        keys = _path_keys(path)
+        spec = _base_spec(keys, leaf.shape, cfg, ax)
+        if fsdp:
+            skip = (0,) if _is_stacked(keys) else ()
+            spec = _add_fsdp(spec, leaf.shape, ax, skip_dims=skip)
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def client_pspecs(cfg: ModelConfig, params, ax: MeshAxes, *,
+                  cohort_dim: bool = True):
+    """Client param tree; leaves optionally carry a leading cohort dim
+    sharded on the data axes (one cohort per data slice)."""
+    def one(path, leaf):
+        keys = _path_keys(path)
+        shape = leaf.shape[1:] if cohort_dim else leaf.shape
+        spec = _base_spec(keys, shape, cfg, ax)
+        if cohort_dim:
+            spec = [ax.data_spec] + spec
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_pspecs(param_specs, params, ax: MeshAxes, *, zero: bool = True):
+    """Adam state specs: mu/nu follow the param spec, plus ZeRO-1 extra
+    sharding of large replicated dims over data.  ``step`` is replicated
+    (or matches its vector shape for per-cohort steps)."""
+    def one(ps, leaf):
+        spec = list(ps) + [None] * (leaf.ndim - len(ps))
+        if zero:
+            used = {a for s in spec if s is not None
+                    for a in ((s,) if isinstance(s, str) else s)}
+            if not (set(ax.data) & used):
+                spec = _add_fsdp(spec, leaf.shape, ax, skip_dims=(0,)
+                                 if leaf.ndim > 2 else ())
+        return P(*spec)
+    mu = jax.tree.map(one, param_specs, params)
+    return {"mu": mu, "nu": mu,
+            "step": P()}
+
+
+def mask_pspecs(cfg: ModelConfig, masks, ax: MeshAxes):
+    """AdaSplit per-unit masks: leaves (C, n_rep, U) -> cohort on data,
+    units on model where divisible."""
+    def one(leaf):
+        spec = [ax.data_spec] + [None] * (leaf.ndim - 1)
+        if leaf.ndim >= 2 and ax.model and _div(leaf.shape[-1],
+                                                ax.model_size):
+            spec[-1] = ax.model
+        return P(*spec)
+    return jax.tree.map(one, masks)
+
+
+def cache_pspecs(cfg: ModelConfig, cache, ax: MeshAxes, *,
+                 batch_shardable: bool = True):
+    """KV / SSM cache specs.
+
+    kv leaves under segments: (n_rep, B, L, Hkv, hd) — batch on data,
+    heads on model if divisible else head_dim on model.
+    ssm state: (n_rep, B, H, P, N) — H on model.  conv: replicated tail.
+    """
+    M = ax.model_size
+    bspec = ax.data_spec if batch_shardable else None
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        leafname = keys[-1]
+        nd = leaf.ndim
+        spec = [None] * nd
+        # all cache leaves under segments have leading n_rep then batch
+        if nd >= 2:
+            spec[1] = bspec
+        if leafname in ("k", "v") or keys[-1] in ("cross_k", "cross_v"):
+            # (n_rep, B, L, Hkv, hd)
+            if nd >= 5:
+                if _div(leaf.shape[-2], M):
+                    spec[-2] = ax.model
+                elif _div(leaf.shape[-1], M):
+                    spec[-1] = ax.model
+        elif leafname == "state":
+            # (n_rep, B, H, P, N)
+            if nd >= 5 and _div(leaf.shape[2], M):
+                spec[2] = ax.model
+        # conv tail: replicated beyond batch
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def batch_spec(ax: MeshAxes, ndim: int, *, batch_dim: int = 0):
+    spec = [None] * ndim
+    spec[batch_dim] = ax.data_spec
+    return P(*spec)

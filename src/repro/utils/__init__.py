@@ -1,0 +1,2 @@
+from repro.utils.tree import (tree_add, tree_scale, tree_zeros_like,
+                              tree_l2_norm, tree_size, tree_cast)

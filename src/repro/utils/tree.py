@@ -1,0 +1,42 @@
+"""Small pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b, scale_b: float = 1.0):
+    return jax.tree.map(lambda x, y: x + scale_b * y, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_l2_norm(a):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x: jnp.sum(x.astype(jnp.float32) ** 2), a))
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.asarray(0.0)
+
+
+def tree_size(a) -> int:
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,21 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the real single CPU device (the 512-device override belongs to
+launch/dryrun.py ONLY)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_clients():
+    from repro.data.synthetic import mixed_noniid
+    return mixed_noniid(n_clients=3, n_per_client=64, n_test=32, seed=0)

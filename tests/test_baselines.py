@@ -1,0 +1,58 @@
+"""Baseline trainers: run, meter, and respect their protocol shapes."""
+import numpy as np
+import pytest
+
+from repro.baselines import BASELINES, make_trainer
+from repro.configs.base import get_config
+
+CFG = get_config("lenet-cifar")
+
+
+@pytest.mark.parametrize("name", BASELINES)
+def test_baseline_trains_and_meters(name, tiny_clients):
+    tr = make_trainer(name, CFG, tiny_clients, rounds=2, batch_size=16)
+    hist = tr.train()
+    assert len(hist) == 2
+    assert "accuracy" in hist[-1]
+    assert tr.meter.bandwidth_bytes > 0
+    assert tr.meter.client_flops > 0
+    assert 0.0 <= tr.c3(1.0, 1.0) <= 1.0
+
+
+def test_fl_bandwidth_is_model_sized(tiny_clients):
+    """FL payload ~ 2 x model bytes x clients x rounds (eq. 2)."""
+    from repro.utils.tree import tree_bytes
+    tr = make_trainer("fedavg", CFG, tiny_clients, rounds=2, batch_size=16)
+    tr.train()
+    expect = 2 * tree_bytes(tr.global_params) * len(tiny_clients) * 2
+    assert abs(tr.meter.bandwidth_bytes - expect) / expect < 1e-6
+
+
+def test_scaffold_doubles_fl_bandwidth(tiny_clients):
+    a = make_trainer("fedavg", CFG, tiny_clients, rounds=1, batch_size=16)
+    a.train()
+    s = make_trainer("scaffold", CFG, tiny_clients, rounds=1, batch_size=16)
+    s.train()
+    assert abs(s.meter.bandwidth_bytes - 2 * a.meter.bandwidth_bytes) \
+        / a.meter.bandwidth_bytes < 1e-6
+
+
+def test_sl_client_compute_below_fl(tiny_clients):
+    """Split learning's raison d'etre: client FLOPs << FL client FLOPs."""
+    fl = make_trainer("fedavg", CFG, tiny_clients, rounds=1, batch_size=16)
+    fl.train()
+    sl = make_trainer("sl-basic", CFG, tiny_clients, rounds=1,
+                      batch_size=16)
+    sl.train()
+    assert sl.meter.client_flops < 0.5 * fl.meter.client_flops
+
+
+def test_splitfed_averages_client_models(tiny_clients):
+    import jax
+    tr = make_trainer("splitfed", CFG, tiny_clients, rounds=1,
+                      batch_size=16)
+    tr.train()
+    p0 = jax.tree.leaves(tr.client_params[0])
+    p1 = jax.tree.leaves(tr.client_params[1])
+    for a, b in zip(p0, p1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

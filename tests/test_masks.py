@@ -1,0 +1,109 @@
+"""Mask semantics: eq. 7 equivalences and fold-for-serving correctness."""
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import masks as masks_mod
+from repro import models
+
+
+def _setup(arch, n_clients=3, seed=0):
+    cfg = get_config(arch).reduced()
+    params = models.init_params(cfg, jax.random.PRNGKey(seed))
+    masks = masks_mod.init_unit_masks(cfg, n_clients)
+    # random binary masks
+    key = jax.random.PRNGKey(seed + 1)
+    masks = jax.tree.map(
+        lambda m: (jax.random.uniform(jax.random.fold_in(key, m.size),
+                                      m.shape) > 0.4).astype(m.dtype),
+        masks)
+    return cfg, params, masks
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "qwen3-moe-30b-a3b",
+                                  "mamba2-370m", "jamba-v0.1-52b"])
+def test_fold_equals_gated_forward(arch):
+    """server_forward with activation gates == forward through folded
+    weights (binary masks; the DESIGN.md --fold-mask equivalence)."""
+    cfg, params, masks = _setup(arch)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    acts = models.client_forward(cfg, params["client"], tokens)
+    client = 1
+    gates = masks_mod.gates_for_client(masks, client)
+    lg_gated, _ = models.server_forward(cfg, params["server"], acts,
+                                        tokens, gates=gates)
+    folded = masks_mod.fold_unit_masks(cfg, params["server"], masks, client)
+    lg_fold, _ = models.server_forward(cfg, folded, acts, tokens)
+    np.testing.assert_allclose(np.asarray(lg_gated, np.float32),
+                               np.asarray(lg_fold, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_distinct_clients_get_distinct_effective_models():
+    cfg, params, masks = _setup("qwen2-0.5b")
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    acts = models.client_forward(cfg, params["client"], tokens)
+    outs = []
+    for c in range(2):
+        gates = masks_mod.gates_for_client(masks, c)
+        lg, _ = models.server_forward(cfg, params["server"], acts, tokens,
+                                      gates=gates)
+        outs.append(np.asarray(lg, np.float32))
+    assert np.abs(outs[0] - outs[1]).max() > 1e-4
+
+
+def test_expand_gates_per_example_matches_per_client():
+    """Batched cohort gates (B,U) must equal running each client alone."""
+    cfg, params, masks = _setup("qwen2-0.5b", n_clients=2)
+    rng = np.random.default_rng(2)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    acts = models.client_forward(cfg, params["client"], tokens)
+    client_ids = jnp.asarray([0, 1], jnp.int32)
+    gates_b = masks_mod.expand_gates(masks, client_ids)
+    lg_b, _ = models.server_forward(cfg, params["server"], acts, tokens,
+                                    gates=gates_b)
+    for c in range(2):
+        gates_c = masks_mod.gates_for_client(masks, c)
+        lg_c, _ = models.server_forward(cfg, params["server"],
+                                        acts[c:c + 1], tokens[c:c + 1],
+                                        gates=gates_c)
+        np.testing.assert_allclose(np.asarray(lg_b[c], np.float32),
+                                   np.asarray(lg_c[0], np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+
+def test_scalar_masks_eq7_via_chain_rule():
+    """per-scalar path: masking params before forward == masking grads
+    (eq. 7) for the masked entries."""
+    from repro.models import lenet
+    cfg = get_config("lenet-cifar")
+    sp = lenet.init_server_params(cfg, jax.random.PRNGKey(0))
+    masks = masks_mod.init_scalar_masks(sp, 2)
+    m0 = masks_mod.scalar_mask_for_client(
+        jax.tree.map(lambda m: m.at[0].set(0.0), masks), 0)  # all-zero mask
+    cp = lenet.init_client_params(cfg, jax.random.PRNGKey(1))
+    x = lenet.client_forward(cfg, cp,
+                             jnp.ones((2, cfg.image_size, cfg.image_size,
+                                       3)))
+
+    def loss(sp_):
+        lg, _ = lenet.server_forward(cfg, masks_mod.apply_scalar_masks(
+            sp_, m0), x)
+        return jnp.sum(lg ** 2)
+
+    g = jax.grad(loss)(sp)
+    # zero mask -> zero gradient to every masked param
+    assert all(float(jnp.abs(l).max()) == 0.0 for l in jax.tree.leaves(g))
+
+
+def test_binarize_and_sparsity():
+    m = [{"0": {"mixer": jnp.asarray([[0.01, 0.5, -0.7, 0.02]])}}]
+    b = masks_mod.binarize(m, threshold=0.05)
+    np.testing.assert_allclose(np.asarray(b[0]["0"]["mixer"]),
+                               [[0.0, 1.0, 1.0, 0.0]])
+    assert masks_mod.sparsity(m, threshold=0.05) == 0.5
