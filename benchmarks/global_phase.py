@@ -1,0 +1,111 @@
+"""Batched vs sequential global phase — the PR's tentpole speedup.
+
+Per global iteration the seed executed one jitted ``_server_step`` +
+one ``float(ce)`` host sync PER SELECTED CLIENT; the batched step runs
+the whole selection as one jitted call with a single ``device_get``.
+
+This bench isolates the global-phase iteration (the hot path this PR
+changes — the client step is identical across strategies) and times it
+directly at N=32 (plus N=64 at std/paper scale), reporting ms per
+iteration and the speedup of the batched and exact-sequential
+(``serialize_server_updates``) strategies over the seed loop.  A full
+protocol round (client step + global phase) is reported alongside for
+context.  Per-client minibatches are small (the paper's
+resource-constrained edge-client regime), which is exactly where the
+seed's per-client dispatch + host-sync overhead dominates; timings are
+min-of-reps, robust to CI-box contention.
+
+  PYTHONPATH=src python -m benchmarks.global_phase [--scale=smoke|std|paper]
+
+Acceptance target: batched >= 2x over the seed loop at N=32 on CPU.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, lenet_cfg, scale
+from repro.core.adasplit import AdaSplitHParams, AdaSplitTrainer
+from repro.data.synthetic import mixed_noniid
+
+BATCH = 4
+PER_CLIENT = 8
+REPS = 8
+
+
+def _setup(clients, **hp_kw):
+    hp = AdaSplitHParams(rounds=1, kappa=0.0, eta=0.6, batch_size=BATCH,
+                         seed=0, **hp_kw)
+    tr = AdaSplitTrainer(lenet_cfg(), hp, clients)
+    xs = np.stack([c.x[:BATCH] for c in tr.clients])
+    ys = np.stack([c.y[:BATCH] for c in tr.clients])
+    _, _, _, acts = tr._client_step(
+        {"c": tr.client_params, "p": tr.proj_params}, tr.c_opt,
+        jnp.asarray(xs), jnp.asarray(ys))
+    jax.block_until_ready(acts)
+    return tr, acts, xs, ys
+
+
+def _iter_time(clients, **hp_kw):
+    """ms per global-phase iteration (compile excluded)."""
+    tr, acts, xs, ys = _setup(clients, **hp_kw)
+    fn = (tr._global_iteration if tr.hp.global_batch
+          else tr._global_iteration_loop)
+    selected = tr.orch.select()
+    fn(selected, acts, xs, ys)           # warmup: compile
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.time()
+        fn(selected, acts, xs, ys)       # device_get / float() syncs
+        best = min(best, time.time() - t0)
+    return best * 1e3
+
+
+def _round_time(clients, **hp_kw):
+    """seconds per full protocol round (client step + global phase)."""
+    hp = AdaSplitHParams(rounds=1, kappa=0.0, eta=0.6, batch_size=BATCH,
+                         seed=0, **hp_kw)
+    tr = AdaSplitTrainer(lenet_cfg(), hp, clients)
+    tr.train(eval_every=10)              # warmup round (compile)
+    t0 = time.time()
+    tr.train(eval_every=10)
+    return time.time() - t0
+
+
+def main():
+    sc = scale()
+    sizes = [32] if sc.rounds <= 4 else [32, 64]
+    rows = []
+    for n in sizes:
+        clients = mixed_noniid(n_clients=n, n_per_client=PER_CLIENT,
+                               n_test=8, seed=0)
+        it_loop = _iter_time(clients, global_batch=False)
+        it_ser = _iter_time(clients, serialize_server_updates=True)
+        it_bat = _iter_time(clients)
+        rd_loop = _round_time(clients, global_batch=False)
+        rd_bat = _round_time(clients)
+        speedup = it_loop / max(it_bat, 1e-9)
+        rows.append([n, f"{it_loop:.1f}", f"{it_ser:.1f}", f"{it_bat:.1f}",
+                     f"{speedup:.2f}",
+                     f"{it_loop / max(it_ser, 1e-9):.2f}",
+                     f"{rd_loop:.3f}", f"{rd_bat:.3f}",
+                     f"{rd_loop / max(rd_bat, 1e-9):.2f}"])
+        print(f"[N={n}] global iter: loop {it_loop:.1f}ms  serialized "
+              f"{it_ser:.1f}ms  batched {it_bat:.1f}ms -> {speedup:.1f}x"
+              f"  |  full round: {rd_loop:.2f}s -> {rd_bat:.2f}s")
+        if n == 32:
+            verdict = "PASS" if speedup >= 2.0 else "MISS"
+            print(f"acceptance (batched >= 2x vs seed loop at N=32): "
+                  f"{verdict} ({speedup:.2f}x)")
+    emit("global_phase (ms/global-iteration + s/round)", rows,
+         ["n_clients", "iter_loop_ms", "iter_serialized_ms",
+          "iter_batched_ms", "iter_speedup_batched",
+          "iter_speedup_serialized", "round_loop_s", "round_batched_s",
+          "round_speedup"])
+
+
+if __name__ == "__main__":
+    main()

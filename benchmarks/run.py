@@ -3,9 +3,9 @@
   PYTHONPATH=src python -m benchmarks.run [--scale=smoke|std|paper]
                                           [--only=table1,table4,...]
 
-Sections: table1 table2 (comparisons), table3..table6 (sensitivity),
-fig1 (trade-off curve), kernels (microbench), roofline (if dry-run
-artifacts exist).
+Sections: global_phase (batched vs sequential global phase), table1
+table2 (comparisons), table3..table6 (sensitivity), fig1 (trade-off
+curve), kernels (microbench), roofline (if dry-run artifacts exist).
 """
 from __future__ import annotations
 
@@ -22,9 +22,10 @@ def main() -> None:
     t0 = time.time()
 
     from benchmarks import ablation_masks, comparison, fig1_tradeoff, \
-        kernel_bench, sensitivity
+        global_phase, kernel_bench, sensitivity
 
     sections = [
+        ("global_phase", global_phase.main),
         ("table1", comparison.table1),
         ("table2", comparison.table2),
         ("table3", sensitivity.table3),

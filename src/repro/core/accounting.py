@@ -28,6 +28,22 @@ def array_bytes(shape, dtype_bytes=4, nnz_fraction: Optional[float] = None
     return nnz * (dtype_bytes + 4)  # value + int32 index
 
 
+def split_payload_bytes(acts_shape, batch, *,
+                        nnz_fraction: Optional[float] = None,
+                        grad_down: bool = False) -> int:
+    """Bytes crossing the client<->server split for one selected client
+    in one global iteration: activations (sparse when ``nnz_fraction``
+    is given) + labels up, activation gradients down when the
+    server-grad-to-client ablation is on.
+
+    ``nnz_fraction`` MUST be the billed client's own sparsity — the
+    per-client metering contract the trainer and its tests rely on.
+    """
+    up = array_bytes(acts_shape, 4, nnz_fraction) + array_bytes((batch,), 4)
+    down = array_bytes(acts_shape, 4) if grad_down else 0
+    return up + down
+
+
 # ---------------------------------------------------------------------------
 # FLOP models
 # ---------------------------------------------------------------------------

@@ -13,13 +13,35 @@ Faithful elements:
     structured per-unit masks (scale adaptation, DESIGN.md §3);
   * bandwidth / compute metering per eq. 1-2, C3-Score at the end.
 
+Batched global phase
+--------------------
+The global phase runs the selected S = eta*N clients as ONE jitted
+step per iteration (``global_batch=True``, the default): masks, mask
+optimizer states and split activations are gathered into a leading S
+axis (``masks.gather_clients``), the CE + L1 gradients are ``vmap``-ed
+across the selection, the server gradient is mean-combined across the
+S clients into a single ``adam_update`` on M^s, and the per-client
+mask/opt updates are scattered back in one ``.at[idx].set``
+(``masks.scatter_clients``).  Per-client CE losses and payload nnz
+fractions come back as device vectors and are fetched with a single
+``jax.device_get`` — O(1) host-device syncs per iteration regardless
+of S.
+
+The mean-combined server update matches the sequential semantics up to
+update ordering (S sequential Adam steps vs one step on the mean
+gradient).  The escape hatch ``serialize_server_updates=True`` keeps
+the single jitted call but runs the selection through a ``lax.scan``
+that recomputes each client's gradient at the *evolving* server
+params, reproducing the seed's sequential loop bit-for-bit (used by
+the differential tests).  ``global_batch=False`` retains the original
+per-client host loop as a reference implementation for benchmarks.
+
 The LM/pod-scale variant of the same protocol lives in
 ``repro.launch.train`` (batched cohorts on the device mesh).
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -28,7 +50,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import masks as masks_mod
-from repro.core.accounting import Meter, array_bytes, lenet_flops_per_example
+from repro.core.accounting import (Meter, lenet_flops_per_example,
+                                   split_payload_bytes)
 from repro.core.c3 import c3_score
 from repro.core.losses import (accuracy, cross_entropy, l1_penalty,
                                ntxent_supervised)
@@ -52,6 +75,8 @@ class AdaSplitHParams:
     act_l1: float = 0.0             # beta: split-activation sparsification
     act_threshold: float = 1e-3     # payload nnz threshold
     server_grad_to_client: bool = False  # Table-5 ablation
+    global_batch: bool = True       # batched global phase (False = seed loop)
+    serialize_server_updates: bool = False  # exact-sequential scan in one jit
     seed: int = 0
 
 
@@ -102,6 +127,7 @@ class AdaSplitTrainer:
 
         self.orch = Orchestrator(self.n, hp.eta, hp.gamma, seed=hp.seed)
         self.meter = Meter()
+        self._fl_s = lenet_flops_per_example(cfg, "server")
         self.history: List[Dict[str, Any]] = []
         self._rng = np.random.default_rng(hp.seed)
         self._compile()
@@ -142,9 +168,7 @@ class AdaSplitTrainer:
                 logits, _ = lenet.server_forward(cfg, sp, acts,
                                                  gates=mask_i)
             loss = cross_entropy(logits, y)
-            return loss + hp.lam * l1_penalty(mask_i) * mask_sz, loss
-
-        mask_sz = 1.0  # l1_penalty is already mean-normalised
+            return loss + hp.lam * l1_penalty(mask_i), loss
 
         def server_step(sp, s_opt, mask_i, m_opt_i, acts, y):
             (total, ce), g = jax.value_and_grad(server_loss, argnums=(0, 1),
@@ -156,22 +180,24 @@ class AdaSplitTrainer:
 
         self._server_step = jax.jit(server_step)
 
-        def joint_step(cp_pp, c_opt_i, sp, s_opt, mask_i, m_opt_i, x, y):
+        def joint_loss(cp_pp, sp, mask_i, x, y):
             """Table-5 ablation: client also receives the server CE grad."""
-            def loss_fn(cp_pp, sp, mask_i):
-                acts = lenet.client_forward(cfg, cp_pp["c"], x)
-                q = _proj_apply(cp_pp["p"], acts)
-                lc = ntxent_supervised(q, y, hp.tau)
-                if hp.mask_mode == "per_scalar":
-                    eff = masks_mod.apply_scalar_masks(sp, mask_i)
-                    logits, _ = lenet.server_forward(cfg, eff, acts)
-                else:
-                    logits, _ = lenet.server_forward(cfg, sp, acts,
-                                                     gates=mask_i)
-                ce = cross_entropy(logits, y)
-                return lc + ce + hp.lam * l1_penalty(mask_i), ce
-            (_, ce), g = jax.value_and_grad(loss_fn, argnums=(0, 1, 2),
-                                            has_aux=True)(cp_pp, sp, mask_i)
+            acts = lenet.client_forward(cfg, cp_pp["c"], x)
+            q = _proj_apply(cp_pp["p"], acts)
+            lc = ntxent_supervised(q, y, hp.tau)
+            if hp.mask_mode == "per_scalar":
+                eff = masks_mod.apply_scalar_masks(sp, mask_i)
+                logits, _ = lenet.server_forward(cfg, eff, acts)
+            else:
+                logits, _ = lenet.server_forward(cfg, sp, acts,
+                                                 gates=mask_i)
+            ce = cross_entropy(logits, y)
+            return lc + ce + hp.lam * l1_penalty(mask_i), ce
+
+        def joint_step(cp_pp, c_opt_i, sp, s_opt, mask_i, m_opt_i, x, y):
+            (_, ce), g = jax.value_and_grad(joint_loss, argnums=(0, 1, 2),
+                                            has_aux=True)(cp_pp, sp, mask_i,
+                                                          x, y)
             cp_pp, c_opt_i = adam_update(cp_pp, g[0], c_opt_i, lr=hp.lr)
             sp, s_opt = adam_update(sp, g[1], s_opt, lr=hp.lr)
             mask_i, m_opt_i = adam_update(mask_i, g[2], m_opt_i, lr=hp.lr)
@@ -179,7 +205,111 @@ class AdaSplitTrainer:
 
         self._joint_step = jax.jit(joint_step)
 
-        def eval_client(cp, pp_unused, sp, mask_i, x, y):
+        # ---- batched global phase (leading S = selected clients) -----
+        def sparsify(acts_sel):
+            """Returns (possibly thresholded acts, per-client nnz (S,))."""
+            if not hp.act_l1:
+                return acts_sel, jnp.ones((acts_sel.shape[0],), jnp.float32)
+            nz = jnp.abs(acts_sel) > hp.act_threshold
+            axes = tuple(range(1, acts_sel.ndim))
+            fracs = jnp.mean(nz.astype(jnp.float32), axis=axes)
+            return jnp.where(nz, acts_sel, 0), fracs
+
+        def flat_server_loss(sp, masks_sel, acts_flat, y_flat, seg_ids, S):
+            """One (S*B)-example forward with per-example gates gathered
+            by client id.  Sum-of-clients loss: grad wrt masks_sel is
+            each client's own CE+L1 gradient (the gather's backward
+            scatter-adds per segment), grad wrt sp is the SUM of
+            per-client gradients (mean = /S outside).  Identical math to
+            a vmap of ``server_loss``, but one conv at S*B batch instead
+            of S convs at B — the segment-reduction form that makes the
+            global phase scale with hardware batch efficiency."""
+            gates = jax.tree.map(lambda l: l[seg_ids], masks_sel)
+            logits, _ = lenet.server_forward(cfg, sp, acts_flat,
+                                             gates=gates)
+            logits = logits.astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, y_flat[:, None],
+                                       axis=-1)[:, 0]
+            ces = (lse - gold).reshape(S, -1).mean(axis=1)
+            total = jnp.sum(ces) + hp.lam * l1_penalty(masks_sel) * S
+            return total, ces
+
+        def global_step(sp, s_opt, masks_sel, m_opt_sel, acts_sel, ys_sel):
+            acts_sel, fracs = sparsify(acts_sel)
+            if hp.serialize_server_updates:
+                def body(carry, xs):
+                    sp, s_opt = carry
+                    m, mo, a, y = xs
+                    sp, s_opt, m, mo, ce = server_step(sp, s_opt, m, mo, a, y)
+                    return (sp, s_opt), (m, mo, ce)
+                (sp, s_opt), (masks_sel, m_opt_sel, ces) = jax.lax.scan(
+                    body, (sp, s_opt),
+                    (masks_sel, m_opt_sel, acts_sel, ys_sel))
+            elif hp.mask_mode == "per_scalar":
+                # per-example scalar masks cannot share one forward
+                # (each client has distinct effective weights) — vmap.
+                grad_fn = jax.value_and_grad(server_loss, argnums=(0, 1),
+                                             has_aux=True)
+                (_, ces), g = jax.vmap(grad_fn, in_axes=(None, 0, 0, 0))(
+                    sp, masks_sel, acts_sel, ys_sel)
+                g_sp = jax.tree.map(lambda t: jnp.mean(t, axis=0), g[0])
+                sp, s_opt = adam_update(sp, g_sp, s_opt, lr=hp.lr)
+                masks_sel, m_opt_sel = jax.vmap(
+                    lambda m, gm, mo: adam_update(m, gm, mo, lr=hp.lr))(
+                    masks_sel, g[1], m_opt_sel)
+            else:
+                S, B = acts_sel.shape[:2]
+                acts_flat = acts_sel.reshape((S * B,) + acts_sel.shape[2:])
+                seg_ids = jnp.repeat(jnp.arange(S), B)
+                (_, ces), g = jax.value_and_grad(
+                    flat_server_loss, argnums=(0, 1), has_aux=True)(
+                    sp, masks_sel, acts_flat, ys_sel.reshape(-1), seg_ids,
+                    S)
+                g_sp = jax.tree.map(lambda t: t / S, g[0])
+                sp, s_opt = adam_update(sp, g_sp, s_opt, lr=hp.lr)
+                masks_sel, m_opt_sel = jax.vmap(
+                    lambda m, gm, mo: adam_update(m, gm, mo, lr=hp.lr))(
+                    masks_sel, g[1], m_opt_sel)
+            return sp, s_opt, masks_sel, m_opt_sel, ces, fracs
+
+        self._global_step = jax.jit(global_step)
+
+        def global_joint_step(cp_sel, c_opt_sel, sp, s_opt, masks_sel,
+                              m_opt_sel, xs_sel, ys_sel, acts_sel):
+            _, fracs = sparsify(acts_sel)
+            if hp.serialize_server_updates:
+                def body(carry, xs):
+                    sp, s_opt = carry
+                    cp, co, m, mo, x, y = xs
+                    cp, co, sp, s_opt, m, mo, ce = joint_step(
+                        cp, co, sp, s_opt, m, mo, x, y)
+                    return (sp, s_opt), (cp, co, m, mo, ce)
+                (sp, s_opt), (cp_sel, c_opt_sel, masks_sel, m_opt_sel,
+                              ces) = jax.lax.scan(
+                    body, (sp, s_opt),
+                    (cp_sel, c_opt_sel, masks_sel, m_opt_sel, xs_sel,
+                     ys_sel))
+            else:
+                grad_fn = jax.value_and_grad(joint_loss, argnums=(0, 1, 2),
+                                             has_aux=True)
+                (_, ces), g = jax.vmap(grad_fn,
+                                       in_axes=(0, None, 0, 0, 0))(
+                    cp_sel, sp, masks_sel, xs_sel, ys_sel)
+                cp_sel, c_opt_sel = jax.vmap(
+                    lambda c, gc, co: adam_update(c, gc, co, lr=hp.lr))(
+                    cp_sel, g[0], c_opt_sel)
+                g_sp = jax.tree.map(lambda t: jnp.mean(t, axis=0), g[1])
+                sp, s_opt = adam_update(sp, g_sp, s_opt, lr=hp.lr)
+                masks_sel, m_opt_sel = jax.vmap(
+                    lambda m, gm, mo: adam_update(m, gm, mo, lr=hp.lr))(
+                    masks_sel, g[2], m_opt_sel)
+            return (cp_sel, c_opt_sel, sp, s_opt, masks_sel, m_opt_sel,
+                    ces, fracs)
+
+        self._global_joint_step = jax.jit(global_joint_step)
+
+        def eval_client(cp, sp, mask_i, x, y):
             acts = lenet.client_forward(cfg, cp, x)
             if hp.mask_mode == "per_scalar":
                 eff = masks_mod.apply_scalar_masks(sp, mask_i)
@@ -189,6 +319,9 @@ class AdaSplitTrainer:
             return accuracy(logits, y)
 
         self._eval_client = jax.jit(eval_client)
+        # all clients at once (single device round-trip per evaluate())
+        self._eval_all = jax.jit(jax.vmap(eval_client,
+                                          in_axes=(0, None, 0, 0, 0)))
 
     # ------------------------------------------------------------------
     def _client_slice(self, tree, i):
@@ -197,23 +330,112 @@ class AdaSplitTrainer:
     def _set_client_slice(self, tree, i, new):
         return jax.tree.map(lambda l, n: l.at[i].set(n), tree, new)
 
-    def _payload_bytes(self, acts_shape, batch):
-        nnz = None
-        if self.hp.act_l1:
-            nnz = self._last_nnz_fraction
-        up = array_bytes(acts_shape, 4, nnz) + array_bytes((batch,), 4)
-        down = 0
-        if self.hp.server_grad_to_client:
-            down = array_bytes(acts_shape, 4)
-        return up + down
+    def _payload_bytes(self, acts_shape, batch,
+                       nnz_fraction: Optional[float] = None):
+        """Bytes crossing the split for ONE selected client this iteration.
+
+        nnz_fraction is that client's own activation sparsity (None when
+        activation sparsification is off) — billing is strictly
+        per-client, never a stale value from another client.
+        """
+        return split_payload_bytes(
+            acts_shape, batch, nnz_fraction=nnz_fraction,
+            grad_down=self.hp.server_grad_to_client)
+
+    # ------------------------------------------------------------------
+    def _global_iteration(self, selected, acts, xs, ys):
+        """One batched global-phase iteration over the selected clients.
+
+        Exactly one host-device sync: per-client CE losses and payload
+        nnz fractions come back together via a single ``device_get``.
+        """
+        hp = self.hp
+        idx = jnp.asarray(np.asarray(selected))
+        masks_sel = masks_mod.gather_clients(self.masks, idx)
+        mopt_sel = masks_mod.gather_clients(self.m_opt, idx)
+        acts_sel = acts[idx]
+        ys_sel = jnp.asarray(ys[np.asarray(selected)])
+
+        if hp.server_grad_to_client:
+            cp_sel = masks_mod.gather_clients(
+                {"c": self.client_params, "p": self.proj_params}, idx)
+            copt_sel = masks_mod.gather_clients(self.c_opt, idx)
+            (cp_sel, copt_sel, self.server_params, self.s_opt, masks_sel,
+             mopt_sel, ces, fracs) = self._global_joint_step(
+                cp_sel, copt_sel, self.server_params, self.s_opt,
+                masks_sel, mopt_sel, jnp.asarray(xs[np.asarray(selected)]),
+                ys_sel, acts_sel)
+            self.client_params = masks_mod.scatter_clients(
+                self.client_params, idx, cp_sel["c"])
+            self.proj_params = masks_mod.scatter_clients(
+                self.proj_params, idx, cp_sel["p"])
+            self.c_opt = masks_mod.scatter_clients(self.c_opt, idx, copt_sel)
+        else:
+            (self.server_params, self.s_opt, masks_sel, mopt_sel, ces,
+             fracs) = self._global_step(
+                self.server_params, self.s_opt, masks_sel, mopt_sel,
+                acts_sel, ys_sel)
+
+        self.masks = masks_mod.scatter_clients(self.masks, idx, masks_sel)
+        self.m_opt = masks_mod.scatter_clients(self.m_opt, idx, mopt_sel)
+
+        losses, fracs = jax.device_get((ces, fracs))  # the one sync
+        acts_shape = acts.shape[1:]
+        fl_s = self._fl_s
+        for k in range(len(selected)):
+            nnz = float(fracs[k]) if hp.act_l1 else None
+            self.meter.add_payload(
+                self._payload_bytes(acts_shape, hp.batch_size, nnz))
+            self.meter.add_server_flops(3 * fl_s * hp.batch_size)
+        return [float(l) for l in losses]
+
+    def _global_iteration_loop(self, selected, acts, xs, ys):
+        """Seed reference: per-client host loop (one dispatch + one
+        host sync per selected client).  Kept for differential tests and
+        the ``benchmarks/global_phase`` comparison."""
+        hp = self.hp
+        losses = []
+        for i in selected:
+            a_i = acts[i]
+            nnz = None
+            if hp.act_l1:
+                nnz = float(jnp.mean((jnp.abs(a_i) > hp.act_threshold)))
+                a_i = jnp.where(jnp.abs(a_i) > hp.act_threshold, a_i, 0)
+            mask_i = self._client_slice(self.masks, i)
+            mopt_i = self._client_slice(self.m_opt, i)
+            if hp.server_grad_to_client:
+                cp_i = self._client_slice(
+                    {"c": self.client_params, "p": self.proj_params}, i)
+                copt_i = self._client_slice(self.c_opt, i)
+                (cp_i, copt_i, self.server_params, self.s_opt,
+                 mask_i, mopt_i, ce) = self._joint_step(
+                    cp_i, copt_i, self.server_params, self.s_opt,
+                    mask_i, mopt_i, jnp.asarray(xs[i]), jnp.asarray(ys[i]))
+                self.client_params = self._set_client_slice(
+                    self.client_params, i, cp_i["c"])
+                self.proj_params = self._set_client_slice(
+                    self.proj_params, i, cp_i["p"])
+                self.c_opt = self._set_client_slice(self.c_opt, i, copt_i)
+            else:
+                (self.server_params, self.s_opt, mask_i, mopt_i,
+                 ce) = self._server_step(
+                    self.server_params, self.s_opt, mask_i, mopt_i,
+                    a_i, jnp.asarray(ys[i]))
+            self.masks = self._set_client_slice(self.masks, i, mask_i)
+            self.m_opt = self._set_client_slice(self.m_opt, i, mopt_i)
+            losses.append(float(ce))
+            self.meter.add_payload(
+                self._payload_bytes(a_i.shape, hp.batch_size, nnz))
+            self.meter.add_server_flops(3 * self._fl_s * hp.batch_size)
+        return losses
 
     # ------------------------------------------------------------------
     def train(self, log_every: int = 1, eval_every: int = 1):
         hp, cfg = self.hp, self.cfg
         local_rounds = int(round(hp.kappa * hp.rounds))
         fl_c = lenet_flops_per_example(cfg, "client")
-        fl_s = lenet_flops_per_example(cfg, "server")
-        self._last_nnz_fraction = 1.0
+        global_iter = (self._global_iteration if hp.global_batch
+                       else self._global_iteration_loop)
 
         for r in range(hp.rounds):
             global_phase = r >= local_rounds
@@ -233,46 +455,7 @@ class AdaSplitTrainer:
                 if not global_phase:
                     continue
                 selected = self.orch.select()
-                losses = []
-                for i in selected:
-                    a_i = acts[i]
-                    if hp.act_l1:
-                        frac = float(jnp.mean(
-                            (jnp.abs(a_i) > hp.act_threshold)))
-                        self._last_nnz_fraction = frac
-                        a_i = jnp.where(jnp.abs(a_i) > hp.act_threshold,
-                                        a_i, 0)
-                    mask_i = self._client_slice(self.masks, i)
-                    mopt_i = self._client_slice(self.m_opt, i)
-                    if hp.server_grad_to_client:
-                        cp_i = self._client_slice(
-                            {"c": self.client_params, "p": self.proj_params},
-                            i)
-                        copt_i = self._client_slice(self.c_opt, i)
-                        (cp_i, copt_i, self.server_params, self.s_opt,
-                         mask_i, mopt_i, ce) = self._joint_step(
-                            cp_i, copt_i, self.server_params, self.s_opt,
-                            mask_i, mopt_i, jnp.asarray(xs[i]),
-                            jnp.asarray(ys[i]))
-                        self.client_params = self._set_client_slice(
-                            self.client_params, i, cp_i["c"])
-                        self.proj_params = self._set_client_slice(
-                            self.proj_params, i, cp_i["p"])
-                        self.c_opt = self._set_client_slice(self.c_opt, i,
-                                                            copt_i)
-                    else:
-                        (self.server_params, self.s_opt, mask_i, mopt_i,
-                         ce) = self._server_step(
-                            self.server_params, self.s_opt, mask_i, mopt_i,
-                            a_i, jnp.asarray(ys[i]))
-                    self.masks = self._set_client_slice(self.masks, i,
-                                                        mask_i)
-                    self.m_opt = self._set_client_slice(self.m_opt, i,
-                                                        mopt_i)
-                    losses.append(float(ce))
-                    self.meter.add_payload(
-                        self._payload_bytes(a_i.shape, hp.batch_size))
-                    self.meter.add_server_flops(3 * fl_s * hp.batch_size)
+                losses = global_iter(selected, acts, xs, ys)
                 self.orch.update(selected, losses)
 
             rec = {"round": r, "phase": "global" if global_phase else "local",
@@ -289,11 +472,18 @@ class AdaSplitTrainer:
 
     # ------------------------------------------------------------------
     def evaluate(self) -> float:
+        shapes = {cd.test_x.shape for cd in self.clients}
+        if len(shapes) == 1:
+            xs = jnp.asarray(np.stack([cd.test_x for cd in self.clients]))
+            ys = jnp.asarray(np.stack([cd.test_y for cd in self.clients]))
+            accs = self._eval_all(self.client_params, self.server_params,
+                                  self.masks, xs, ys)
+            return 100.0 * float(jnp.mean(accs))
         accs = []
         for i, cd in enumerate(self.clients):
             cp = self._client_slice(self.client_params, i)
             mask_i = self._client_slice(self.masks, i)
-            acc = self._eval_client(cp, None, self.server_params, mask_i,
+            acc = self._eval_client(cp, self.server_params, mask_i,
                                     jnp.asarray(cd.test_x),
                                     jnp.asarray(cd.test_y))
             accs.append(float(acc))

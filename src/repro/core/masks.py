@@ -87,6 +87,36 @@ def lenet_gates_for_client(masks, client: int):
 
 
 # ---------------------------------------------------------------------------
+# batched client selection (leading-C pytrees)
+# ---------------------------------------------------------------------------
+
+
+def gather_clients(tree, idx):
+    """Gather a selection of clients from a leading-C stacked pytree.
+
+    Every leaf (C, ...) -> (S, ...) for ``idx`` of shape (S,).  Used by
+    the batched global phase to pull the selected clients' masks /
+    optimizer states / params into one vmap-able S axis.
+    """
+    return jax.tree.map(lambda l: l[idx], tree)
+
+
+def scatter_clients(tree, idx, new):
+    """Inverse of :func:`gather_clients`: write (S, ...) leaves back
+    into the (C, ...) stacked pytree at rows ``idx`` in ONE ``.at[].set``
+    per leaf (no per-client scatter loop)."""
+    return jax.tree.map(lambda l, n: l.at[idx].set(n.astype(l.dtype)),
+                        tree, new)
+
+
+def stack_client_gates(per_client_gates):
+    """Stack per-client gate pytrees (leaves (n_rep, U)) into per-example
+    gates (leaves (n_rep, B, U)) for a mixed-client serving batch."""
+    return [jax.tree.map(lambda *ls: jnp.stack(ls, axis=1), *seg)
+            for seg in zip(*per_client_gates)]
+
+
+# ---------------------------------------------------------------------------
 # per-scalar masks (paper-faithful)
 # ---------------------------------------------------------------------------
 

@@ -209,8 +209,11 @@ def attn_forward(p, x, cfg, *, positions, causal=True, window=0,
         # either one spec for q/k/v (batch-over-model) or a (q_spec,
         # kv_spec) pair (sequence-sharded q + gathered k/v, the
         # ring-attention layout that composes with Megatron-SP)
-        qs, kvs = (qkv_shard if isinstance(qkv_shard, tuple)
-                   else (qkv_shard, qkv_shard))
+        # NB: a bare PartitionSpec IS a tuple subclass — only a true
+        # 2-tuple of specs is the (q_spec, kv_spec) pair form.
+        pair = (isinstance(qkv_shard, tuple)
+                and not isinstance(qkv_shard, jax.sharding.PartitionSpec))
+        qs, kvs = qkv_shard if pair else (qkv_shard, qkv_shard)
         q = jax.lax.with_sharding_constraint(q, qs)
         k = jax.lax.with_sharding_constraint(k, kvs)
         v = jax.lax.with_sharding_constraint(v, kvs)

@@ -162,7 +162,14 @@ def run_segments_prefill(cfg, segments, seg_params, x, *, positions,
 def prefill(cfg: ModelConfig, params, tokens, extras=None, *, gates=None,
             window: int = 0, dtype=None, chunked=None, cache_len: int = 0,
             qkv_shard=None, attn_out_shard=None):
-    """Build cache from a prompt.  Returns (last_logits, cache)."""
+    """Build cache from a prompt.  Returns (last_logits, cache).
+
+    gates: optional per-server-segment AdaSplit masks — leaves either
+    (n_rep, U) for one client shared across the batch, or (n_rep, B, U)
+    per-example (``masks.expand_gates`` / ``masks.stack_client_gates``)
+    so a single batch can serve MIXED clients, each example gated by
+    its own client's mask.
+    """
     dtype = dtype or jnp.dtype(cfg.dtype)
     plan = model_plan(cfg)
     pc, ps = params["client"], params["server"]
@@ -216,7 +223,9 @@ def decode_step(cfg: ModelConfig, params, token, cache, pos, *, gates=None,
     """One token for the whole (composed) model.
 
     token: (B, 1) int32; pos: scalar int32 current position.
-    gates apply to the server segments only (AdaSplit per-client masks).
+    gates apply to the server segments only (AdaSplit per-client
+    masks); as in :func:`prefill`, leaves may carry a per-example B
+    axis for mixed-client serving batches.
     Returns (logits (B,1,V), new_cache).
     """
     dtype = dtype or jnp.dtype(cfg.dtype)

@@ -82,7 +82,12 @@ def client_forward(cfg, p, images, extras=None, *, dtype=None, **_):
 
 def server_forward(cfg, p, acts, tokens=None, extras=None, *, gates=None,
                    **_):
-    """gates: {"blocks": [(C,) or (B,C) ...], "fc1": ..., "fc2": ...}"""
+    """gates: {"blocks": [...], "fc1": ..., "fc2": ...} with each leaf
+    either (U,) — one client's unit mask shared across the batch — or
+    (B, U) per-example gates.  The per-example form is what lets the
+    batched global phase flatten S selected clients into ONE (S*B)
+    forward (each example gated by its own client's mask row) and grab
+    per-client mask grads from the gather's scatter-add backward."""
     x = acts
     for i, bp in enumerate(p["blocks"]):
         g = gates["blocks"][i] if gates is not None else None

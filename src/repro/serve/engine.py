@@ -6,10 +6,22 @@ folded ``M^s * m_i``.  The engine:
 
 * keeps an LRU cache of mask-folded server weights (folding is paid
   once per client session, not per token — DESIGN.md §4);
-* groups queued requests BY CLIENT into decode batches (requests of the
-  same client share one effective model, so they can batch);
+* groups queued requests into decode batches.  Two policies:
+  - ``mixed_batches=False`` (seed behaviour): batch BY CLIENT — the
+    FIFO head's client and every queued request of that client share
+    one folded effective model;
+  - ``mixed_batches=True``: take the FIFO head-of-line requests of ANY
+    client, stack each request's per-unit gates into per-example gates
+    (leaves (n_rep, B, U), ``masks.stack_client_gates``) and run ONE
+    gate-batched server forward for the whole batch.  Activation-space
+    gating is mathematically the folded model applied per example, so
+    heterogeneous clients batch without weight duplication.  Per-client
+    gate pytrees are LRU-cached (gathered + binarized once per session,
+    reused for every batch that contains the client);
 * pads prompts to a shared length per batch, prefils once, then decodes
-  step-by-step with per-request stop handling.
+  step-by-step with per-request stop handling.  The decode step is
+  jitted ONCE per engine (not per batch), so steady-state batches pay
+  zero retrace.
 
 This is the framework's serving layer; ``examples/personalized_serving``
 shows the single-session path, tests cover scheduling invariants.
@@ -18,7 +30,7 @@ from __future__ import annotations
 
 import collections
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import jax
@@ -46,8 +58,11 @@ class EngineStats:
     requests: int = 0
     tokens: int = 0
     batches: int = 0
+    mixed_batches: int = 0          # batches spanning >1 client
     fold_hits: int = 0
     fold_misses: int = 0
+    gate_hits: int = 0              # per-client gate-cache reuse
+    gate_misses: int = 0
     wall_s: float = 0.0
 
     @property
@@ -62,16 +77,24 @@ class EngineStats:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, masks=None, *,
                  max_batch: int = 8, fold_cache_size: int = 4,
-                 window: int = 0, binarize_threshold: float = 0.0):
+                 window: int = 0, binarize_threshold: float = 0.0,
+                 mixed_batches: bool = False):
         self.cfg, self.params, self.masks = cfg, params, masks
         self.max_batch = max_batch
         self.window = window
         self.binarize_threshold = binarize_threshold
+        self.mixed_batches = mixed_batches
         self.queue: collections.deque = collections.deque()
         self.stats = EngineStats()
         self._fold_cache: "collections.OrderedDict[int, dict]" = \
             collections.OrderedDict()
+        self._gate_cache: "collections.OrderedDict[int, list]" = \
+            collections.OrderedDict()
         self._fold_cache_size = fold_cache_size
+        # a mixed batch can touch up to max_batch distinct clients per
+        # step — size the gate cache so a steady rotation still hits
+        self._gate_cache_size = max(fold_cache_size, max_batch)
+        self._step = jax.jit(self._step_fn)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -94,11 +117,33 @@ class ServeEngine:
             self._fold_cache.popitem(last=False)
         return folded
 
+    def _gates_for(self, client_id: int):
+        """One client's per-unit gate pytree (leaves (n_rep, U)),
+        binarized per the engine threshold, LRU-cached."""
+        if client_id in self._gate_cache:
+            self.stats.gate_hits += 1
+            self._gate_cache.move_to_end(client_id)
+            return self._gate_cache[client_id]
+        self.stats.gate_misses += 1
+        g = masks_mod.gates_for_client(self.masks, client_id)
+        if self.binarize_threshold > 0:
+            g = masks_mod.binarize(g, self.binarize_threshold)
+        self._gate_cache[client_id] = g
+        if len(self._gate_cache) > self._gate_cache_size:
+            self._gate_cache.popitem(last=False)
+        return g
+
     def _next_batch(self) -> List[Request]:
-        """FIFO head's client, then every queued request of that client
-        up to max_batch (same effective model => batchable)."""
+        """Mixed policy: strict FIFO, up to max_batch requests of any
+        client (gate-batched forward handles heterogeneity).  Client
+        policy (seed): FIFO head's client, then every queued request of
+        that client up to max_batch (same folded model => batchable).
+        Both preserve per-client FIFO order."""
         if not self.queue:
             return []
+        if self.mixed_batches:
+            return [self.queue.popleft()
+                    for _ in range(min(self.max_batch, len(self.queue)))]
         head = self.queue[0]
         batch, keep = [], collections.deque()
         while self.queue and len(batch) < self.max_batch:
@@ -112,11 +157,30 @@ class ServeEngine:
         return batch
 
     # ------------------------------------------------------------------
+    def _step_fn(self, params, cache, tok, pos, gates):
+        lg, cache = dec.decode_step(self.cfg, params, tok, cache, pos,
+                                    window=self.window, gates=gates)
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32), cache
+
+    def _batch_model(self, batch: List[Request]):
+        """(params, gates) for the batch: folded weights for a
+        single-client batch, per-example gates for a mixed one."""
+        clients = [r.client_id for r in batch]
+        if self.masks is None:
+            return {"client": self.params["client"],
+                    "server": self.params["server"]}, None
+        if len(set(clients)) == 1:
+            return {"client": self.params["client"],
+                    "server": self._server_for(clients[0])}, None
+        gates = masks_mod.stack_client_gates(
+            [self._gates_for(c) for c in clients])
+        return {"client": self.params["client"],
+                "server": self.params["server"]}, gates
+
     def _run_batch(self, batch: List[Request]):
         cfg = self.cfg
         t0 = time.time()
-        params = {"client": self.params["client"],
-                  "server": self._server_for(batch[0].client_id)}
+        params, gates = self._batch_model(batch)
         plen = max(len(r.prompt) for r in batch)
         gen = max(r.max_new_tokens for r in batch)
         prompts = np.zeros((len(batch), plen), np.int32)
@@ -130,20 +194,14 @@ class ServeEngine:
             extras = {"src_embeds": jnp.zeros(
                 (len(batch), plen, cfg.d_model), jnp.bfloat16)}
         logits, cache = dec.prefill(cfg, params, prompts, extras,
-                                    window=self.window,
+                                    window=self.window, gates=gates,
                                     cache_len=cache_len)
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         outs = [tok]
 
-        @jax.jit
-        def step(params, cache, tok, pos):
-            lg, cache = dec.decode_step(cfg, params, tok, cache, pos,
-                                        window=self.window)
-            return jnp.argmax(lg, axis=-1).astype(jnp.int32), cache
-
         for t in range(gen - 1):
-            tok, cache = step(params, cache, tok,
-                              jnp.asarray(plen + t, jnp.int32))
+            tok, cache = self._step(params, cache, tok,
+                                    jnp.asarray(plen + t, jnp.int32), gates)
             outs.append(tok)
         out = np.asarray(jnp.concatenate(outs, axis=1))
         dt = time.time() - t0
@@ -153,6 +211,8 @@ class ServeEngine:
         self.stats.requests += len(batch)
         self.stats.tokens += int(sum(r.max_new_tokens for r in batch))
         self.stats.batches += 1
+        if len({r.client_id for r in batch}) > 1:
+            self.stats.mixed_batches += 1
         self.stats.wall_s += dt
         return batch
 

@@ -3,6 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import get_config
@@ -20,6 +24,7 @@ def _trainer(tiny_clients, **kw):
     return AdaSplitTrainer(CFG, AdaSplitHParams(**defaults), tiny_clients)
 
 
+@pytest.mark.slow
 def test_local_phase_has_zero_bandwidth(tiny_clients):
     """P_is = 0 for all rounds r < kappa*R (paper §3.2)."""
     tr = _trainer(tiny_clients, rounds=3, kappa=1.0)  # all local
@@ -28,6 +33,7 @@ def test_local_phase_has_zero_bandwidth(tiny_clients):
     assert tr.meter.server_flops == 0.0  # server never trains either
 
 
+@pytest.mark.slow
 def test_global_phase_meters_bandwidth(tiny_clients):
     tr = _trainer(tiny_clients, rounds=2, kappa=0.0)
     tr.train(eval_every=10)
@@ -35,6 +41,7 @@ def test_global_phase_meters_bandwidth(tiny_clients):
     assert tr.meter.server_flops > 0
 
 
+@pytest.mark.slow
 def test_no_server_gradient_to_client(tiny_clients):
     """P_si = 0: client params after a global step must be identical
     whether or not the server trained on the activations (the client
@@ -52,6 +59,7 @@ def test_no_server_gradient_to_client(tiny_clients):
         np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_server_grad_ablation_changes_client(tiny_clients):
     """Table-5 ablation flag routes server CE grad into the client."""
     hp = AdaSplitHParams(rounds=1, kappa=0.0, batch_size=16, seed=7,
@@ -69,6 +77,7 @@ def test_server_grad_ablation_changes_client(tiny_clients):
     assert tr.meter.bandwidth_bytes > 1.5 * tr2.meter.bandwidth_bytes
 
 
+@pytest.mark.slow
 def test_high_lambda_shrinks_masks(tiny_clients):
     """L1 drives mask magnitudes down (Adam makes the step size
     scale-free in lambda, so at few-round horizons we check the mean
@@ -88,6 +97,7 @@ def test_high_lambda_shrinks_masks(tiny_clients):
     assert mean_abs(tr_hi.masks) < 1.0  # moved off the init
 
 
+@pytest.mark.slow
 def test_activation_sparsification_reduces_payload(tiny_clients):
     """Table 6: the beta (act_l1) knob cuts bandwidth.  Sparse payloads
     cost nnz*(value+index) bytes, so the win needs nnz < 50% — use an
@@ -167,6 +177,38 @@ def test_c3_monotone_increasing_in_accuracy(a1, delta):
     hi = c3_score(min(a1 + delta, 100.0), 1.0, 1.0,
                   bandwidth_budget=10.0, compute_budget=10.0)
     assert hi > lo
+
+
+# ---------------------------------------------------------------------------
+# Batched global phase: gather/scatter round-trip (property)
+# ---------------------------------------------------------------------------
+
+
+@given(n=st.integers(2, 12), data=st.data())
+@settings(max_examples=30, deadline=None)
+def test_mask_gather_scatter_roundtrip_property(n, data):
+    """gather_clients/scatter_clients round-trip for ARBITRARY selection
+    subsets — the invariant the batched global phase rests on."""
+    from repro.core import masks as masks_mod
+    idx = data.draw(st.lists(st.integers(0, n - 1), min_size=1, max_size=n,
+                             unique=True))
+    tree = {"a": jnp.arange(n * 3.0).reshape(n, 3),
+            "b": [jnp.arange(n * 2.0).reshape(n, 2) + 7.0,
+                  jnp.arange(float(n))]}
+    jidx = jnp.asarray(np.asarray(idx))
+    sel = masks_mod.gather_clients(tree, jidx)
+    back = masks_mod.scatter_clients(tree, jidx, sel)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # writes land exactly on the selected rows
+    out = masks_mod.scatter_clients(tree, jidx,
+                                    jax.tree.map(lambda l: l + 1.0, sel))
+    chosen = set(idx)
+    for lin, lout in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        for r in range(n):
+            exp = lin[r] + 1.0 if r in chosen else lin[r]
+            np.testing.assert_array_equal(np.asarray(lout[r]),
+                                          np.asarray(exp))
 
 
 def test_c3_matches_paper_scale():

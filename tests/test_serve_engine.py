@@ -73,6 +73,97 @@ def test_engine_fold_cache(setup):
     assert eng.stats.fold_misses == 2
 
 
+# ---------------------------------------------------------------------------
+# Mixed-client batches (gate-batched server forward)
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_batches_fifo_and_occupancy(setup):
+    """Mixed policy: per-client FIFO order preserved, and occupancy on an
+    interleaved workload is >= the single-client policy's."""
+    cfg, params, masks = setup
+    spec = [(0, 6, 2), (1, 6, 2), (2, 6, 2), (0, 6, 2), (1, 6, 2),
+            (2, 6, 2), (0, 6, 2), (1, 6, 2)]
+
+    def run(mixed):
+        eng = ServeEngine(cfg, params, masks, max_batch=4,
+                          mixed_batches=mixed)
+        rs = _reqs(np.random.default_rng(4), cfg, spec)
+        for r in rs:
+            eng.submit(r)
+        return eng, eng.run_until_idle()
+
+    em, done_m = run(True)
+    ec, done_c = run(False)
+    assert len(done_m) == len(spec)
+    assert em.stats.mixed_batches > 0
+    assert em.stats.mean_batch_occupancy >= ec.stats.mean_batch_occupancy
+    assert em.stats.batches < ec.stats.batches
+    # FIFO preserved per client: completion order == submission order
+    for c in {c for c, _, _ in spec}:
+        ids = [r.req_id for r in done_m if r.client_id == c]
+        assert ids == sorted(ids)
+
+
+def test_mixed_batch_gate_cache_reuse(setup):
+    """Gates are gathered once per distinct client and reused for
+    duplicates in the batch and for later batches."""
+    cfg, params, masks = setup
+    rng = np.random.default_rng(5)
+    eng = ServeEngine(cfg, params, masks, max_batch=8, mixed_batches=True)
+    for r in _reqs(rng, cfg, [(0, 6, 2), (1, 6, 2), (0, 6, 2), (2, 6, 2),
+                              (1, 6, 2)]):
+        eng.submit(r)
+    eng.run_until_idle()
+    assert eng.stats.gate_misses == 3      # distinct clients 0, 1, 2
+    assert eng.stats.gate_hits == 2        # duplicate rows in the batch
+    for r in _reqs(rng, cfg, [(0, 6, 2), (2, 6, 2)]):
+        eng.submit(r)
+    eng.run_until_idle()
+    assert eng.stats.gate_misses == 3      # still cached
+    assert eng.stats.gate_hits == 4
+    # every batch here was mixed -> the fold cache was never consulted
+    assert eng.stats.fold_misses == 0 and eng.stats.fold_hits == 0
+
+
+def test_mixed_batch_outputs_equal_per_client_batches(setup):
+    """Greedy decode through one mixed gate-batched forward must produce
+    the same tokens as the per-client folded batches (same prompt
+    lengths, so padding is identical)."""
+    cfg, params, masks = setup
+    rng = np.random.default_rng(6)
+    spec = [(0, 8, 4), (1, 8, 4), (0, 8, 4), (2, 8, 4), (1, 8, 4)]
+    prompts = [rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+               for _ in spec]
+
+    def run(mixed):
+        eng = ServeEngine(cfg, params, masks, max_batch=8,
+                          mixed_batches=mixed)
+        rs = [Request(i, c, prompts[i], mn)
+              for i, (c, _, mn) in enumerate(spec)]
+        for r in rs:
+            eng.submit(r)
+        eng.run_until_idle()
+        return {r.req_id: r.output.tolist() for r in rs}
+
+    out_mixed, out_client = run(True), run(False)
+    assert out_mixed == out_client
+
+
+def test_mixed_single_client_batch_uses_fold_cache(setup):
+    """A homogeneous batch under the mixed policy still takes the folded
+    path (no per-example gating cost for the common case)."""
+    cfg, params, masks = setup
+    rng = np.random.default_rng(7)
+    eng = ServeEngine(cfg, params, masks, max_batch=4, mixed_batches=True)
+    for r in _reqs(rng, cfg, [(1, 6, 2)] * 3):
+        eng.submit(r)
+    eng.run_until_idle()
+    assert eng.stats.fold_misses == 1
+    assert eng.stats.gate_misses == 0
+    assert eng.stats.mixed_batches == 0
+
+
 def test_engine_personalization(setup):
     """Same prompt, different client -> different tokens (distinct
     effective models), same client -> identical tokens."""

@@ -10,6 +10,8 @@ from repro.configs.base import InputShape, get_config
 from repro.core.adasplit import AdaSplitHParams, AdaSplitTrainer
 from repro.data.synthetic import mixed_noniid
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def small_clients():
