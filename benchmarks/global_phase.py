@@ -37,8 +37,10 @@ REPS = 8
 
 
 def _setup(clients, **hp_kw):
+    # round_scan=False: this bench isolates the PR-1 per-iteration
+    # strategies (the round scan is measured in benchmarks/round_scan.py)
     hp = AdaSplitHParams(rounds=1, kappa=0.0, eta=0.6, batch_size=BATCH,
-                         seed=0, **hp_kw)
+                         seed=0, round_scan=False, **hp_kw)
     tr = AdaSplitTrainer(lenet_cfg(), hp, clients)
     xs = np.stack([c.x[:BATCH] for c in tr.clients])
     ys = np.stack([c.y[:BATCH] for c in tr.clients])
@@ -67,7 +69,7 @@ def _iter_time(clients, **hp_kw):
 def _round_time(clients, **hp_kw):
     """seconds per full protocol round (client step + global phase)."""
     hp = AdaSplitHParams(rounds=1, kappa=0.0, eta=0.6, batch_size=BATCH,
-                         seed=0, **hp_kw)
+                         seed=0, round_scan=False, **hp_kw)
     tr = AdaSplitTrainer(lenet_cfg(), hp, clients)
     tr.train(eval_every=10)              # warmup round (compile)
     t0 = time.time()

@@ -1,0 +1,261 @@
+"""Device-resident rounds vs the eager per-iteration driver — this
+PR's tentpole speedup.
+
+The PR-1 eager path pays, per global iteration, a host-side control
+plane: UCB ``select`` (device sync on the bandit state), eager
+per-leaf gathers/scatters around the jitted global step, a
+``device_get`` for the losses, and the host ``update`` — on top of the
+step's compute.  The round scan fuses select -> global-step -> update
+into the round's single jitted ``lax.scan`` (selection in-graph,
+stacked loss/nnz accumulators, ONE ``device_get`` per round), so the
+marginal cost of a global iteration is just its compute.
+
+Two classification views, each eager-vs-scan per global iteration
+(min-of-reps, compile and eval excluded; both sides consume the same
+pre-staged activations, so the client step is out of the measurement —
+the scan side times a jitted scan of T fused select -> global-step ->
+update iterations, exactly the in-graph form of ``_round_iteration``'s
+global half):
+
+  * paper LeNet — end-to-end honest numbers.  On the 2-core CPU box
+    XLA's grouped-conv latency (~100ms+, untouched by this PR)
+    dominates, capping the visible win (~1.1-1.5x; the full-round
+    speedup also benefits from client/global overlap across scan
+    iterations).
+  * lenet-lite (conv_channels=(4,8), B=2) — shrinks compute so the
+    unit measures the control plane the PR eliminates.  This is the
+    acceptance row: scan >= 2x over the PR-1 eager path at N=32.
+
+plus the reduced LM cohort path: per-step time with per-step metric
+syncs (the pre-PR behaviour, ``log_every=1``) vs deferred syncs.
+
+  PYTHONPATH=src python -m benchmarks.round_scan [--scale=smoke|std|paper]
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, lenet_cfg, scale
+from repro.core.adasplit import AdaSplitHParams, AdaSplitTrainer
+from repro.data.synthetic import mixed_noniid
+
+T = 4                    # iterations per round
+REPS = 10
+LM_STEPS = 6
+
+
+def lite_cfg():
+    return dataclasses.replace(lenet_cfg(), name="lenet-lite",
+                               conv_channels=(4, 8), d_model=32)
+
+
+def _mk(cfg, clients, batch, **hp_kw):
+    hp = AdaSplitHParams(rounds=1, kappa=0.0, eta=0.6, batch_size=batch,
+                         seed=0, **hp_kw)
+    return AdaSplitTrainer(cfg, hp, clients)
+
+
+def _iters(clients, batch):
+    return [[(c.x[t * batch:(t + 1) * batch],
+              c.y[t * batch:(t + 1) * batch]) for t in range(T)]
+            for c in clients]
+
+
+def _eager_iter_ms(cfg, clients, batch):
+    """PR-1 path: host select + batched global iteration + host update."""
+    tr = _mk(cfg, clients, batch, round_scan=False)
+    xs = np.stack([c.x[:batch] for c in tr.clients])
+    ys = np.stack([c.y[:batch] for c in tr.clients])
+    _, _, _, acts = tr._client_step(
+        {"c": tr.client_params, "p": tr.proj_params}, tr.c_opt,
+        jnp.asarray(xs), jnp.asarray(ys))
+    jax.block_until_ready(acts)
+
+    def one():
+        sel = tr.orch.select()
+        losses = tr._global_iteration(sel, acts, xs, ys)
+        tr.orch.update(sel, losses)
+    one()                                # warmup: compile
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.time()
+        one()
+        best = min(best, time.time() - t0)
+    return best * 1e3
+
+
+def _scan_round_s(tr, iters, global_phase):
+    tr._run_round_scan(iters, T, global_phase)    # warmup: compile
+    jax.block_until_ready(tr.server_params)
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.time()
+        tr._run_round_scan(iters, T, global_phase)
+        # client-only rounds perform no sync at all — block for a fair
+        # reading
+        jax.block_until_ready(tr.server_params)
+        best = min(best, time.time() - t0)
+    return best
+
+
+def _scan_global_iter_ms(cfg, clients, batch):
+    """In-graph global phase over pre-staged acts: a jitted scan of T
+    select -> global-step -> update iterations (the global half of
+    ``_round_iteration``), ONE device_get for the stacked losses."""
+    from repro.core import masks as masks_mod
+    from repro.core.orchestrator import ucb_select, ucb_update
+    tr = _mk(cfg, clients, batch)
+    acts_l, ys_l = [], []
+    for t in range(T):
+        xs = np.stack([c.x[t * batch:(t + 1) * batch]
+                       for c in tr.clients])
+        ys = np.stack([c.y[t * batch:(t + 1) * batch]
+                       for c in tr.clients])
+        _, _, _, a = tr._client_step(
+            {"c": tr.client_params, "p": tr.proj_params}, tr.c_opt,
+            jnp.asarray(xs), jnp.asarray(ys))
+        acts_l.append(a)
+        ys_l.append(ys)
+    acts_round = jnp.stack(acts_l)
+    ys_round = jnp.asarray(np.stack(ys_l))
+    jax.block_until_ready(acts_round)
+
+    n, k, gamma = tr.n, tr.orch.k, tr.hp.gamma
+    gs, select_key = tr._global_step_fn, tr.orch.select_key
+
+    def body(carry, xs):
+        sp, s_opt, masks, m_opt, ucb = carry
+        a_t, y_t, t = xs
+        idx = ucb_select(ucb, k, select_key(t))
+        msel = masks_mod.gather_clients(masks, idx)
+        mosel = masks_mod.gather_clients(m_opt, idx)
+        sp, s_opt, msel, mosel, ces, fracs = gs(
+            sp, s_opt, msel, mosel, a_t[idx], y_t[idx])
+        masks = masks_mod.scatter_clients(masks, idx, msel)
+        m_opt = masks_mod.scatter_clients(m_opt, idx, mosel)
+        selm = jnp.zeros((n,), jnp.float32).at[idx].set(1.0)
+        dense = jnp.zeros((n,), jnp.float32).at[idx].set(ces)
+        ucb = ucb_update(ucb, selm, dense, gamma=gamma)
+        return (sp, s_opt, masks, m_opt, ucb), (idx, ces, fracs)
+
+    @jax.jit
+    def groll(carry, acts_round, ys_round, t_idx):
+        return jax.lax.scan(body, carry, (acts_round, ys_round, t_idx),
+                            unroll=T)
+
+    t_idx = jnp.arange(T, dtype=jnp.int32)
+    carry = (tr.server_params, tr.s_opt, tr.masks, tr.m_opt,
+             tr.orch.state)
+    out = groll(carry, acts_round, ys_round, t_idx)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.time()
+        o = groll(carry, acts_round, ys_round, t_idx)
+        jax.device_get(o[1])             # the round's one sync
+        best = min(best, time.time() - t0)
+    return best / T * 1e3
+
+
+def _eager_round_s(cfg, clients, batch):
+    """Full eager round (client step + global phase per iteration)."""
+    tr = _mk(cfg, clients, batch, round_scan=False)
+    iters = _iters(clients, batch)
+
+    def one_round():
+        for t in range(T):
+            xs = np.stack([iters[i][t][0] for i in range(tr.n)])
+            ys = np.stack([iters[i][t][1] for i in range(tr.n)])
+            cp_pp = {"c": tr.client_params, "p": tr.proj_params}
+            new, tr.c_opt, _, acts = tr._client_step(
+                cp_pp, tr.c_opt, jnp.asarray(xs), jnp.asarray(ys))
+            tr.client_params, tr.proj_params = new["c"], new["p"]
+            sel = tr.orch.select()
+            losses = tr._global_iteration(sel, acts, xs, ys)
+            tr.orch.update(sel, losses)
+    one_round()                          # warmup: compile
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.time()
+        one_round()
+        best = min(best, time.time() - t0)
+    return best
+
+
+def _lm_step_ms():
+    """Per-step ms for the reduced LM cohort path, per-step vs deferred
+    metric syncs.  Returns (per_step_sync_ms, deferred_ms)."""
+    from repro.configs.base import InputShape, get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import LaunchPolicy
+    from repro.launch.train import LMAdaSplitTrainer
+    cfg = get_config("qwen2-0.5b").reduced()
+    mesh = make_host_mesh()
+    shape = InputShape("bench", 64, 8, "train")
+    pol = LaunchPolicy(fsdp=False, microbatch=1, seq_shard=False,
+                       n_seq_classes=mesh.shape["data"])
+    tr = LMAdaSplitTrainer(cfg, mesh, shape, pol, kappa=0.0)
+    tr.run(2)                            # warmup: compile global step
+    out = [float("inf"), float("inf")]
+    for _ in range(3):                   # interleaved min-of-reps
+        for j, log_every in enumerate((1, LM_STEPS)):
+            t0 = time.time()
+            tr.run(LM_STEPS, log_every=log_every)
+            out[j] = min(out[j], (time.time() - t0) / LM_STEPS * 1e3)
+    return out
+
+
+def _section(cfg, batch, sizes, accept_at=None):
+    rows = []
+    for n in sizes:
+        clients = mixed_noniid(n_clients=n, n_per_client=batch * T,
+                               n_test=8, seed=0)
+        eager_it = _eager_iter_ms(cfg, clients, batch)
+        scan_it = _scan_global_iter_ms(cfg, clients, batch)
+        g = _scan_round_s(_mk(cfg, clients, batch),
+                          _iters(clients, batch), True)
+        rd_eager = _eager_round_s(cfg, clients, batch)
+        speedup = eager_it / max(scan_it, 1e-9)
+        rows.append([n, f"{eager_it:.1f}", f"{scan_it:.1f}",
+                     f"{speedup:.2f}", f"{rd_eager:.3f}", f"{g:.3f}",
+                     f"{rd_eager / max(g, 1e-9):.2f}"])
+        print(f"[{cfg.name} N={n} B={batch}] global iter: eager "
+              f"{eager_it:.1f}ms  scan {scan_it:.1f}ms -> {speedup:.1f}x"
+              f"  |  round: {rd_eager:.2f}s -> {g:.2f}s "
+              f"({rd_eager / max(g, 1e-9):.2f}x)")
+        if accept_at is not None and n == accept_at:
+            verdict = "PASS" if speedup >= 2.0 else "MISS"
+            print(f"acceptance (control-plane row: scan >= 2x vs PR-1 "
+                  f"eager at N={accept_at}): {verdict} ({speedup:.2f}x)")
+    emit(f"round_scan {cfg.name} B={batch} "
+         "(ms/global-iteration + s/round, eval excluded)",
+         rows, ["n_clients", "eager_iter_ms", "scan_iter_ms",
+                "iter_speedup", "round_eager_s", "round_scan_s",
+                "round_speedup"])
+
+
+def main():
+    sc = scale()
+    smoke = sc.rounds <= 4
+    if smoke:
+        _section(lite_cfg(), 2, [8], accept_at=None)
+        return
+    _section(lenet_cfg(), 4, [16, 32])
+    _section(lite_cfg(), 2, [32], accept_at=32)
+
+    sync_ms, defer_ms = _lm_step_ms()
+    print(f"[LM reduced] per-step sync {sync_ms:.1f}ms  deferred "
+          f"{defer_ms:.1f}ms -> {sync_ms / max(defer_ms, 1e-9):.2f}x")
+    emit("round_scan_lm (ms/step, reduced qwen2-0.5b)",
+         [[f"{sync_ms:.1f}", f"{defer_ms:.1f}",
+           f"{sync_ms / max(defer_ms, 1e-9):.2f}"]],
+         ["per_step_sync_ms", "deferred_sync_ms", "speedup"])
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,8 @@
   PYTHONPATH=src python -m benchmarks.run [--scale=smoke|std|paper]
                                           [--only=table1,table4,...]
 
-Sections: global_phase (batched vs sequential global phase), table1
+Sections: round_scan (device-resident rounds vs eager driver),
+global_phase (batched vs sequential global phase), table1
 table2 (comparisons), table3..table6 (sensitivity), fig1 (trade-off
 curve), kernels (microbench), roofline (if dry-run artifacts exist).
 """
@@ -22,9 +23,10 @@ def main() -> None:
     t0 = time.time()
 
     from benchmarks import ablation_masks, comparison, fig1_tradeoff, \
-        global_phase, kernel_bench, sensitivity
+        global_phase, kernel_bench, round_scan, sensitivity
 
     sections = [
+        ("round_scan", round_scan.main),
         ("global_phase", global_phase.main),
         ("table1", comparison.table1),
         ("table2", comparison.table2),

@@ -30,17 +30,22 @@ def array_bytes(shape, dtype_bytes=4, nnz_fraction: Optional[float] = None
 
 def split_payload_bytes(acts_shape, batch, *,
                         nnz_fraction: Optional[float] = None,
-                        grad_down: bool = False) -> int:
+                        grad_down: bool = False,
+                        dtype_bytes: int = 4) -> int:
     """Bytes crossing the client<->server split for one selected client
     in one global iteration: activations (sparse when ``nnz_fraction``
     is given) + labels up, activation gradients down when the
     server-grad-to-client ablation is on.
 
-    ``nnz_fraction`` MUST be the billed client's own sparsity — the
-    per-client metering contract the trainer and its tests rely on.
+    ``dtype_bytes`` is the activation element width (2 for the LM
+    cohorts' bf16 payloads, 4 for the f32 classification path); labels
+    are always int32.  ``nnz_fraction`` MUST be the billed client's own
+    sparsity — the per-client metering contract the trainer and its
+    tests rely on.
     """
-    up = array_bytes(acts_shape, 4, nnz_fraction) + array_bytes((batch,), 4)
-    down = array_bytes(acts_shape, 4) if grad_down else 0
+    up = array_bytes(acts_shape, dtype_bytes, nnz_fraction) \
+        + array_bytes((batch,), 4)
+    down = array_bytes(acts_shape, dtype_bytes) if grad_down else 0
     return up + down
 
 
@@ -133,6 +138,40 @@ class Meter:
     @property
     def total_tflops(self) -> float:
         return (self.client_flops + self.server_flops) / 1e12
+
+    def ingest_round(self, *, acts_shape, batch, n_clients, n_iters,
+                     client_flops_per_example, server_flops_per_example,
+                     nnz_fracs=None, n_selected=None, grad_down=False,
+                     dtype_bytes=4):
+        """Bill a whole round of the protocol after ONE device fetch.
+
+        The round scan (core/adasplit.py) accumulates per-iteration
+        payload nnz fractions and selection counts on-device; this
+        ingests the stacked results with the SAME per-event accumulation
+        order as the eager per-iteration path (client FLOPs, then per
+        selected client payload + server FLOPs), so totals match the
+        reference bit-for-bit.
+
+        nnz_fracs: optional (n_iters, k) per-selected-client activation
+        nnz fractions (activation sparsification on); ``n_selected`` (k)
+        is required when ``nnz_fracs`` is None and ignored otherwise.
+        """
+        if nnz_fracs is not None:
+            nnz_fracs = np.asarray(nnz_fracs)
+            n_selected = nnz_fracs.shape[1]
+        assert n_selected is not None
+        fwd_bwd = 3  # fwd + 2x bwd
+        for t in range(n_iters):
+            self.add_client_flops(fwd_bwd * client_flops_per_example
+                                  * n_clients * batch)
+            for j in range(n_selected):
+                f = float(nnz_fracs[t, j]) if nnz_fracs is not None \
+                    else None
+                self.add_payload(split_payload_bytes(
+                    acts_shape, batch, nnz_fraction=f,
+                    grad_down=grad_down, dtype_bytes=dtype_bytes))
+                self.add_server_flops(fwd_bwd * server_flops_per_example
+                                      * batch)
 
     def summary(self) -> dict:
         return {

@@ -13,31 +13,47 @@ Faithful elements:
     structured per-unit masks (scale adaptation, DESIGN.md §3);
   * bandwidth / compute metering per eq. 1-2, C3-Score at the end.
 
-Batched global phase
---------------------
-The global phase runs the selected S = eta*N clients as ONE jitted
-step per iteration (``global_batch=True``, the default): masks, mask
-optimizer states and split activations are gathered into a leading S
-axis (``masks.gather_clients``), the CE + L1 gradients are ``vmap``-ed
-across the selection, the server gradient is mean-combined across the
-S clients into a single ``adam_update`` on M^s, and the per-client
-mask/opt updates are scattered back in one ``.at[idx].set``
-(``masks.scatter_clients``).  Per-client CE losses and payload nnz
-fractions come back as device vectors and are fetched with a single
-``jax.device_get`` — O(1) host-device syncs per iteration regardless
-of S.
+Device-resident rounds (round scan)
+-----------------------------------
+With ``round_scan=True`` (the default) a whole round lives on-device:
+one jitted ``lax.scan`` runs all T iterations, and each scan step is
+the fused ``_round_iteration``
 
-The mean-combined server update matches the sequential semantics up to
-update ordering (S sequential Adam steps vs one step on the mean
-gradient).  The escape hatch ``serialize_server_updates=True`` keeps
-the single jitted call but runs the selection through a ``lax.scan``
-that recomputes each client's gradient at the *evolving* server
-params, reproducing the seed's sequential loop bit-for-bit (used by
-the differential tests).  ``global_batch=False`` retains the original
-per-client host loop as a reference implementation for benchmarks.
+    client-step -> UCB select -> global-step -> UCB update
+
+with NO host round-trip in between.  Selection is the pure functional
+orchestrator (``core.orchestrator.ucb_*``): the (N,)-state UCB pytree
+rides in the scan carry next to the stacked client/server/mask/opt
+pytrees (all donated, so XLA updates them in place), and ``top_k`` with
+keyed jitter picks the eta*N clients in-graph.  The round's data is
+staged once as a (T, C, B, ...) device array.  Per-iteration CE
+losses, payload nnz fractions and selection indices come back as
+stacked (T, k) device accumulators and are billed after ONE
+``device_get`` per round (``Meter.ingest_round``); the host
+orchestrator absorbs the same arrays so eager and scanned rounds stay
+bit-interchangeable.
+
+Within one iteration the global phase is the PR-1 batched step: the
+selected S = eta*N clients run as one (S*B)-flattened forward with
+per-example gates, the server gradient mean-combined into a single
+``adam_update`` on M^s and per-client mask/opt updates scattered back
+in one ``.at[idx].set``.  The same S*B segment-reduction form now also
+covers the Table-5 ``server_grad_to_client`` joint step
+(``flat_joint=True``; the earlier vmap-per-client form is kept as the
+``flat_joint=False`` reference).  ``serialize_server_updates=True``
+keeps an exact-sequential ``lax.scan`` over the selection inside the
+step (reproduces the seed's per-client loop bit-for-bit);
+``global_batch=False`` retains the original per-client host loop, and
+``round_scan=False`` the per-iteration eager driver — both as reference
+implementations for the differential tests and benchmarks
+(``benchmarks/round_scan.py``, ``benchmarks/global_phase.py``).
+``fused_mask_adam=True`` routes the per-client mask updates through the
+fused Pallas masked-Adam kernel on TPU (``kernels/masked_adam``),
+falling back to ``adam_update`` elsewhere.
 
 The LM/pod-scale variant of the same protocol lives in
-``repro.launch.train`` (batched cohorts on the device mesh).
+``repro.launch.train`` (batched cohorts on the device mesh, with the
+same in-graph orchestrator via ``launch.steps.build_ucb_train_step``).
 """
 from __future__ import annotations
 
@@ -55,7 +71,7 @@ from repro.core.accounting import (Meter, lenet_flops_per_example,
 from repro.core.c3 import c3_score
 from repro.core.losses import (accuracy, cross_entropy, l1_penalty,
                                ntxent_supervised)
-from repro.core.orchestrator import Orchestrator
+from repro.core.orchestrator import Orchestrator, ucb_select, ucb_update
 from repro.models import lenet
 from repro.optim.adam import adam_init, adam_update
 
@@ -77,6 +93,9 @@ class AdaSplitHParams:
     server_grad_to_client: bool = False  # Table-5 ablation
     global_batch: bool = True       # batched global phase (False = seed loop)
     serialize_server_updates: bool = False  # exact-sequential scan in one jit
+    round_scan: bool = True         # whole round under one jitted lax.scan
+    flat_joint: bool = True         # S*B-flattened joint step (vs vmap ref)
+    fused_mask_adam: bool = False   # Pallas fused mask update (TPU only)
     seed: int = 0
 
 
@@ -127,9 +146,11 @@ class AdaSplitTrainer:
 
         self.orch = Orchestrator(self.n, hp.eta, hp.gamma, seed=hp.seed)
         self.meter = Meter()
+        self._fl_c = lenet_flops_per_example(cfg, "client")
         self._fl_s = lenet_flops_per_example(cfg, "server")
         self.history: List[Dict[str, Any]] = []
         self._rng = np.random.default_rng(hp.seed)
+        self._round_fns: Dict[Any, Any] = {}
         self._compile()
 
     # ------------------------------------------------------------------
@@ -137,10 +158,21 @@ class AdaSplitTrainer:
         x = jnp.zeros((1, self.cfg.image_size, self.cfg.image_size, 3))
         cp = lenet.init_client_params(self.cfg, jax.random.PRNGKey(0))
         a = lenet.client_forward(self.cfg, cp, x)
+        self._acts_spatial = tuple(a.shape[1:])
         return int(np.prod(a.shape[1:]))
 
     def _compile(self):
         cfg, hp = self.cfg, self.hp
+        use_fused = hp.fused_mask_adam and jax.default_backend() == "tpu"
+        if use_fused:
+            from repro.kernels.masked_adam import fused_adam_update
+
+            def mask_adam(m, gm, mo):
+                return fused_adam_update(m, gm, mo, lr=hp.lr,
+                                         interpret=False)
+        else:
+            def mask_adam(m, gm, mo):
+                return adam_update(m, gm, mo, lr=hp.lr)
 
         def client_loss(cp_pp, x, y):
             acts = lenet.client_forward(cfg, cp_pp["c"], x)
@@ -158,7 +190,8 @@ class AdaSplitTrainer:
 
         # vmapped across clients (each on its own batch) — Adam state has a
         # shared scalar step; vmap over it too (stacked below).
-        self._client_step = jax.jit(jax.vmap(client_step))
+        self._client_step_fn = jax.vmap(client_step)
+        self._client_step = jax.jit(self._client_step_fn)
 
         def server_loss(sp, mask_i, acts, y):
             if hp.mask_mode == "per_scalar":
@@ -215,6 +248,14 @@ class AdaSplitTrainer:
             fracs = jnp.mean(nz.astype(jnp.float32), axis=axes)
             return jnp.where(nz, acts_sel, 0), fracs
 
+        def seg_ces(logits, y_flat, S):
+            """Per-client mean CE from (S*B,) flattened logits."""
+            logits = logits.astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, y_flat[:, None],
+                                       axis=-1)[:, 0]
+            return (lse - gold).reshape(S, -1).mean(axis=1)
+
         def flat_server_loss(sp, masks_sel, acts_flat, y_flat, seg_ids, S):
             """One (S*B)-example forward with per-example gates gathered
             by client id.  Sum-of-clients loss: grad wrt masks_sel is
@@ -227,11 +268,7 @@ class AdaSplitTrainer:
             gates = jax.tree.map(lambda l: l[seg_ids], masks_sel)
             logits, _ = lenet.server_forward(cfg, sp, acts_flat,
                                              gates=gates)
-            logits = logits.astype(jnp.float32)
-            lse = jax.nn.logsumexp(logits, axis=-1)
-            gold = jnp.take_along_axis(logits, y_flat[:, None],
-                                       axis=-1)[:, 0]
-            ces = (lse - gold).reshape(S, -1).mean(axis=1)
+            ces = seg_ces(logits, y_flat, S)
             total = jnp.sum(ces) + hp.lam * l1_penalty(masks_sel) * S
             return total, ces
 
@@ -255,8 +292,7 @@ class AdaSplitTrainer:
                     sp, masks_sel, acts_sel, ys_sel)
                 g_sp = jax.tree.map(lambda t: jnp.mean(t, axis=0), g[0])
                 sp, s_opt = adam_update(sp, g_sp, s_opt, lr=hp.lr)
-                masks_sel, m_opt_sel = jax.vmap(
-                    lambda m, gm, mo: adam_update(m, gm, mo, lr=hp.lr))(
+                masks_sel, m_opt_sel = jax.vmap(mask_adam)(
                     masks_sel, g[1], m_opt_sel)
             else:
                 S, B = acts_sel.shape[:2]
@@ -268,12 +304,39 @@ class AdaSplitTrainer:
                     S)
                 g_sp = jax.tree.map(lambda t: t / S, g[0])
                 sp, s_opt = adam_update(sp, g_sp, s_opt, lr=hp.lr)
-                masks_sel, m_opt_sel = jax.vmap(
-                    lambda m, gm, mo: adam_update(m, gm, mo, lr=hp.lr))(
+                masks_sel, m_opt_sel = jax.vmap(mask_adam)(
                     masks_sel, g[1], m_opt_sel)
             return sp, s_opt, masks_sel, m_opt_sel, ces, fracs
 
+        self._global_step_fn = global_step
         self._global_step = jax.jit(global_step)
+
+        def flat_joint_loss(cp_sel, sp, masks_sel, xs_sel, ys_sel,
+                            seg_ids, S):
+            """Joint (Table-5) step in the same S*B segment-reduction
+            form as ``flat_server_loss``: per-client forwards stay
+            vmapped (each client has its own params) but the shared
+            server runs ONE flattened conv over all S*B examples.
+            Sum-of-clients loss => grads wrt cp_sel / masks_sel are each
+            client's own, grad wrt sp the sum (mean = /S outside) —
+            identical math to the vmap of ``joint_loss``."""
+            def client_part(cp_pp, x):
+                acts = lenet.client_forward(cfg, cp_pp["c"], x)
+                q = _proj_apply(cp_pp["p"], acts)
+                return acts, q
+
+            acts, qs = jax.vmap(client_part)(cp_sel, xs_sel)
+            lcs = jax.vmap(
+                lambda q, y: ntxent_supervised(q, y, hp.tau))(qs, ys_sel)
+            B = xs_sel.shape[1]
+            acts_flat = acts.reshape((S * B,) + acts.shape[2:])
+            gates = jax.tree.map(lambda l: l[seg_ids], masks_sel)
+            logits, _ = lenet.server_forward(cfg, sp, acts_flat,
+                                             gates=gates)
+            ces = seg_ces(logits, ys_sel.reshape(-1), S)
+            total = jnp.sum(lcs) + jnp.sum(ces) \
+                + hp.lam * l1_penalty(masks_sel) * S
+            return total, ces
 
         def global_joint_step(cp_sel, c_opt_sel, sp, s_opt, masks_sel,
                               m_opt_sel, xs_sel, ys_sel, acts_sel):
@@ -290,6 +353,19 @@ class AdaSplitTrainer:
                     body, (sp, s_opt),
                     (cp_sel, c_opt_sel, masks_sel, m_opt_sel, xs_sel,
                      ys_sel))
+            elif hp.flat_joint and hp.mask_mode != "per_scalar":
+                S, B = xs_sel.shape[:2]
+                seg_ids = jnp.repeat(jnp.arange(S), B)
+                (_, ces), g = jax.value_and_grad(
+                    flat_joint_loss, argnums=(0, 1, 2), has_aux=True)(
+                    cp_sel, sp, masks_sel, xs_sel, ys_sel, seg_ids, S)
+                cp_sel, c_opt_sel = jax.vmap(
+                    lambda c, gc, co: adam_update(c, gc, co, lr=hp.lr))(
+                    cp_sel, g[0], c_opt_sel)
+                g_sp = jax.tree.map(lambda t: t / S, g[1])
+                sp, s_opt = adam_update(sp, g_sp, s_opt, lr=hp.lr)
+                masks_sel, m_opt_sel = jax.vmap(mask_adam)(
+                    masks_sel, g[2], m_opt_sel)
             else:
                 grad_fn = jax.value_and_grad(joint_loss, argnums=(0, 1, 2),
                                              has_aux=True)
@@ -301,12 +377,12 @@ class AdaSplitTrainer:
                     cp_sel, g[0], c_opt_sel)
                 g_sp = jax.tree.map(lambda t: jnp.mean(t, axis=0), g[1])
                 sp, s_opt = adam_update(sp, g_sp, s_opt, lr=hp.lr)
-                masks_sel, m_opt_sel = jax.vmap(
-                    lambda m, gm, mo: adam_update(m, gm, mo, lr=hp.lr))(
+                masks_sel, m_opt_sel = jax.vmap(mask_adam)(
                     masks_sel, g[2], m_opt_sel)
             return (cp_sel, c_opt_sel, sp, s_opt, masks_sel, m_opt_sel,
                     ces, fracs)
 
+        self._global_joint_fn = global_joint_step
         self._global_joint_step = jax.jit(global_joint_step)
 
         def eval_client(cp, sp, mask_i, x, y):
@@ -322,6 +398,118 @@ class AdaSplitTrainer:
         # all clients at once (single device round-trip per evaluate())
         self._eval_all = jax.jit(jax.vmap(eval_client,
                                           in_axes=(0, None, 0, 0, 0)))
+
+    # ------------------------------------------------------------------
+    # device-resident round: fused iteration + lax.scan over T
+    # ------------------------------------------------------------------
+    def _round_fn(self, T: int, global_phase: bool):
+        """One jitted fn running a whole round: scan of the fused
+        client-step -> select -> global-step -> UCB-update iteration.
+        Cached per (T, global_phase); carries are donated off-CPU so
+        XLA updates the stacked param/opt/mask pytrees in place."""
+        cache_key = (T, global_phase)
+        if cache_key in self._round_fns:
+            return self._round_fns[cache_key]
+        hp = self.hp
+        n, k, gamma = self.n, self.orch.k, self.hp.gamma
+        client_step = self._client_step_fn
+        global_step = self._global_step_fn
+        global_joint = self._global_joint_fn
+        select_key = self.orch.select_key   # one key schedule, both paths
+
+        def _round_iteration(carry, xs):
+            cp_pp, c_opt, sp, s_opt, masks, m_opt, ucb = carry
+            x_t, y_t, t = xs
+            cp_pp, c_opt, _, acts = client_step(cp_pp, c_opt, x_t, y_t)
+            if not global_phase:
+                return (cp_pp, c_opt, sp, s_opt, masks, m_opt, ucb), None
+
+            idx = ucb_select(ucb, k, select_key(t))
+            masks_sel = masks_mod.gather_clients(masks, idx)
+            mopt_sel = masks_mod.gather_clients(m_opt, idx)
+            acts_sel, ys_sel = acts[idx], y_t[idx]
+            if hp.server_grad_to_client:
+                cp_sel = masks_mod.gather_clients(cp_pp, idx)
+                copt_sel = masks_mod.gather_clients(c_opt, idx)
+                (cp_sel, copt_sel, sp, s_opt, masks_sel, mopt_sel, ces,
+                 fracs) = global_joint(cp_sel, copt_sel, sp, s_opt,
+                                       masks_sel, mopt_sel, x_t[idx],
+                                       ys_sel, acts_sel)
+                cp_pp = masks_mod.scatter_clients(cp_pp, idx, cp_sel)
+                c_opt = masks_mod.scatter_clients(c_opt, idx, copt_sel)
+            else:
+                sp, s_opt, masks_sel, mopt_sel, ces, fracs = global_step(
+                    sp, s_opt, masks_sel, mopt_sel, acts_sel, ys_sel)
+            masks = masks_mod.scatter_clients(masks, idx, masks_sel)
+            m_opt = masks_mod.scatter_clients(m_opt, idx, mopt_sel)
+
+            sel_mask = jnp.zeros((n,), jnp.float32).at[idx].set(1.0)
+            dense = jnp.zeros((n,), jnp.float32).at[idx].set(ces)
+            ucb = ucb_update(ucb, sel_mask, dense, gamma=gamma)
+            carry = (cp_pp, c_opt, sp, s_opt, masks, m_opt, ucb)
+            return carry, (idx, ces, fracs)
+
+        # XLA:CPU serializes ops inside a while-loop body onto one
+        # thread; fully unrolling short rounds (trip count 1) restores
+        # intra-op parallelism at ~2x wall-clock.  Accelerator backends
+        # keep the rolled loop (no such penalty, smaller programs).
+        on_cpu = jax.default_backend() == "cpu"
+        unroll = T if (on_cpu and 1 <= T <= 8) else 1
+
+        def round_fn(carry, xs_round, ys_round, t_idx):
+            return jax.lax.scan(_round_iteration, carry,
+                                (xs_round, ys_round, t_idx),
+                                unroll=unroll)
+
+        donate = () if on_cpu else (0,)
+        fn = jax.jit(round_fn, donate_argnums=donate)
+        self._round_fns[cache_key] = fn
+        return fn
+
+    def _run_round_scan(self, iters, T: int, global_phase: bool):
+        """Stage the round's data as (T, C, B, ...) once, run the scan,
+        then bill meters + orchestrator from ONE device fetch."""
+        hp = self.hp
+        if T == 0:
+            return
+        xs_round = np.stack(
+            [np.stack([iters[i][t][0] for i in range(self.n)])
+             for t in range(T)])
+        ys_round = np.stack(
+            [np.stack([iters[i][t][1] for i in range(self.n)])
+             for t in range(T)])
+        t_idx = jnp.arange(self.orch._n_selects,
+                           self.orch._n_selects + T, dtype=jnp.int32)
+
+        fn = self._round_fn(T, global_phase)
+        carry = ({"c": self.client_params, "p": self.proj_params},
+                 self.c_opt, self.server_params, self.s_opt, self.masks,
+                 self.m_opt, self.orch.state)
+        carry, outs = fn(carry, jnp.asarray(xs_round),
+                         jnp.asarray(ys_round), t_idx)
+        (cp_pp, self.c_opt, self.server_params, self.s_opt, self.masks,
+         self.m_opt, ucb) = carry
+        self.client_params, self.proj_params = cp_pp["c"], cp_pp["p"]
+
+        acts_shape = (hp.batch_size,) + self._acts_spatial
+        if global_phase:
+            idx_all, ces_all, fracs_all = jax.device_get(outs)  # one sync
+            self.meter.ingest_round(
+                acts_shape=acts_shape, batch=hp.batch_size,
+                n_clients=self.n, n_iters=T,
+                client_flops_per_example=self._fl_c,
+                server_flops_per_example=self._fl_s,
+                nnz_fracs=fracs_all if hp.act_l1 else None,
+                n_selected=idx_all.shape[1],
+                grad_down=hp.server_grad_to_client)
+            self.orch.ingest_round(idx_all, ces_all, state=ucb)
+        else:
+            self.meter.ingest_round(
+                acts_shape=acts_shape, batch=hp.batch_size,
+                n_clients=self.n, n_iters=T,
+                client_flops_per_example=self._fl_c,
+                server_flops_per_example=self._fl_s, n_selected=0)
+            self.orch.state = ucb
 
     # ------------------------------------------------------------------
     def _client_slice(self, tree, i):
@@ -433,7 +621,8 @@ class AdaSplitTrainer:
     def train(self, log_every: int = 1, eval_every: int = 1):
         hp, cfg = self.hp, self.cfg
         local_rounds = int(round(hp.kappa * hp.rounds))
-        fl_c = lenet_flops_per_example(cfg, "client")
+        fl_c = self._fl_c
+        use_scan = hp.round_scan and hp.global_batch
         global_iter = (self._global_iteration if hp.global_batch
                        else self._global_iteration_loop)
 
@@ -442,21 +631,25 @@ class AdaSplitTrainer:
             self.orch.new_round()
             iters = [list(self._epoch_batches(i)) for i in range(self.n)]
             T = min(len(it) for it in iters)
-            for t in range(T):
-                xs = np.stack([iters[i][t][0] for i in range(self.n)])
-                ys = np.stack([iters[i][t][1] for i in range(self.n)])
-                cp_pp = {"c": self.client_params, "p": self.proj_params}
-                new, self.c_opt, closs, acts = self._client_step(
-                    cp_pp, self.c_opt, jnp.asarray(xs), jnp.asarray(ys))
-                self.client_params, self.proj_params = new["c"], new["p"]
-                # 3x forward FLOPs for fwd+bwd
-                self.meter.add_client_flops(3 * fl_c * self.n * hp.batch_size)
+            if use_scan:
+                self._run_round_scan(iters, T, global_phase)
+            else:
+                for t in range(T):
+                    xs = np.stack([iters[i][t][0] for i in range(self.n)])
+                    ys = np.stack([iters[i][t][1] for i in range(self.n)])
+                    cp_pp = {"c": self.client_params, "p": self.proj_params}
+                    new, self.c_opt, closs, acts = self._client_step(
+                        cp_pp, self.c_opt, jnp.asarray(xs), jnp.asarray(ys))
+                    self.client_params, self.proj_params = new["c"], new["p"]
+                    # 3x forward FLOPs for fwd+bwd
+                    self.meter.add_client_flops(
+                        3 * fl_c * self.n * hp.batch_size)
 
-                if not global_phase:
-                    continue
-                selected = self.orch.select()
-                losses = global_iter(selected, acts, xs, ys)
-                self.orch.update(selected, losses)
+                    if not global_phase:
+                        continue
+                    selected = self.orch.select()
+                    losses = global_iter(selected, acts, xs, ys)
+                    self.orch.update(selected, losses)
 
             rec = {"round": r, "phase": "global" if global_phase else "local",
                    **self.meter.summary()}

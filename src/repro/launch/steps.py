@@ -35,6 +35,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import (INPUT_SHAPES, LONG_CONTEXT_WINDOW,
                                 InputShape, ModelConfig)
 from repro.core import masks as masks_mod
+from repro.core import orchestrator as orch_mod
 from repro.core.losses import (chunked_cross_entropy, l1_penalty,
                                ntxent_supervised)
 from repro.models import transformer as tfm
@@ -439,6 +440,54 @@ def build_train_step(cfg: ModelConfig, mesh, shape: InputShape,
     _state_spec_tree = jax.tree.map(lambda s: s.sharding.spec, state_sds)
     batch_sds = input_specs(cfg, shape, mesh, policy)
     return train_step, state_sds, batch_sds
+
+
+def build_ucb_train_step(cfg: ModelConfig, mesh, shape: InputShape,
+                         policy: Optional[LaunchPolicy] = None, *,
+                         eta: float = 0.6, gamma: float = 0.87):
+    """``build_train_step`` with the UCB orchestrator moved in-graph.
+
+    The (C,) cohort ``select`` vector is no longer a host-fed batch
+    input: the step computes it from the functional UCB state
+    (``core.orchestrator``) via ``top_k`` with keyed jitter, runs the
+    train step, and folds the step's CE back into the state — one jit,
+    zero host syncs per iteration.  Returns
+    ``(ucb_step, k, state_sds, batch_sds)`` — ``k`` is the in-graph
+    selection size, returned so drivers bill metering for exactly the
+    cohort count the step selects — with
+
+      ucb_step(state, ucb, batch, key, is_global) -> (state, ucb, metrics)
+
+    ``is_global`` is a TRACED 0/1 scalar (the two-phase schedule), so
+    local and global phases share ONE compilation of the underlying
+    train step: local steps run with ``select = 0`` (the pre-PR local
+    semantics) and leave the UCB state untouched.  ``metrics["select"]``
+    carries the selection mask so drivers can log it at their own
+    (deferred) sync cadence.
+    """
+    fn, state_sds, batch_sds = build_train_step(cfg, mesh, shape, policy)
+    ax = MeshAxes.from_mesh(mesh)
+    C = ax.data_size
+    k = max(1, int(round(eta * C)))
+    sel_sharding = NamedSharding(mesh, P(ax.data_spec))
+
+    def ucb_step(state, ucb, batch, key, is_global):
+        g = is_global.astype(jnp.float32)
+        idx = orch_mod.ucb_select(ucb, k, key)
+        sel = jnp.zeros((C,), jnp.float32).at[idx].set(1.0) * g
+        sel = jax.lax.with_sharding_constraint(sel, sel_sharding)
+        state, metrics = fn(state, dict(batch, select=sel))
+        # every selected cohort observes the step's (shared) CE — the
+        # same signal the former host loop fed the orchestrator
+        new_ucb = orch_mod.ucb_update(ucb, sel,
+                                      jnp.full((C,), metrics["ce"],
+                                               jnp.float32), gamma=gamma)
+        ucb = jax.tree.map(lambda a, b: jnp.where(g > 0, a, b),
+                           new_ucb, ucb)
+        metrics = dict(metrics, select=sel)
+        return state, ucb, metrics
+
+    return ucb_step, k, state_sds, batch_sds
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,14 @@
 """Runnable pod-scale AdaSplit LM trainer.
 
 Drives the compiled ``train_step`` (launch.steps) with the synthetic
-multi-domain LM pipeline (data.tokens), the host-side UCB orchestrator
-feeding the ``select`` vector, eq. 1-2 resource metering, and optional
-checkpointing.  On the CPU container this runs REDUCED configs end-to-end
-(examples/ use it); on a real pod the same driver runs the full configs.
+multi-domain LM pipeline (data.tokens), the ON-DEVICE UCB orchestrator
+(``build_ucb_train_step``: cohort selection + bandit update live inside
+the jitted step), eq. 1-2 resource metering, and optional
+checkpointing.  Metrics are fetched in ONE deferred ``device_get``
+every ``log_every`` steps — the global phase performs no per-step host
+sync.  On the CPU container this runs REDUCED configs end-to-end
+(examples/ use it); on a real pod the same driver runs the full
+configs.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
@@ -22,11 +26,12 @@ import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.configs.base import InputShape, get_config
-from repro.core.accounting import Meter, transformer_flops_per_token
-from repro.core.orchestrator import Orchestrator
+from repro.core.accounting import (Meter, split_payload_bytes,
+                                   transformer_flops_per_token)
+from repro.core.orchestrator import ucb_init
 from repro.data.tokens import lm_batch_iterator, lm_client_dataset
 from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import (LaunchPolicy, build_train_step,
+from repro.launch.steps import (LaunchPolicy, build_ucb_train_step,
                                 init_train_state, train_state_specs)
 
 
@@ -53,16 +58,24 @@ def add_extras(cfg, batch, B, S, rng):
 
 
 class LMAdaSplitTrainer:
-    """AdaSplit over an LM arch on the active mesh (two-phase + UCB)."""
+    """AdaSplit over an LM arch on the active mesh (two-phase + UCB).
+
+    Selection is in-graph (``build_ucb_train_step``): the functional UCB
+    state rides next to the train state and each global step selects,
+    trains and updates the bandit in one jit.  ``run`` therefore never
+    blocks on ``metrics["ce"]`` — per-step metrics are kept as device
+    references and fetched with one ``device_get`` per ``log_every``
+    window.
+    """
 
     def __init__(self, cfg, mesh, shape: InputShape, policy: LaunchPolicy,
                  *, kappa=0.6, eta=0.6, gamma=0.87, seed=0):
         self.cfg, self.mesh, self.shape, self.policy = cfg, mesh, shape, \
             policy
-        self.kappa, self.eta = kappa, eta
+        self.kappa, self.eta, self.gamma = kappa, eta, gamma
         with mesh:
-            self.step_fn, self._state_sds, _ = build_train_step(
-                cfg, mesh, shape, policy)
+            step_fn, self.k, self._state_sds, _ = build_ucb_train_step(
+                cfg, mesh, shape, policy, eta=eta, gamma=gamma)
             from repro.sharding.rules import MeshAxes
             self.C = MeshAxes.from_mesh(mesh).data_size
             state = init_train_state(cfg, self.C, policy,
@@ -71,8 +84,11 @@ class LMAdaSplitTrainer:
             self.state = jax.tree.map(
                 lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
                 state, specs)
-            self._jit_step = jax.jit(self.step_fn)
-        self.orch = Orchestrator(self.C, eta, gamma, seed=seed)
+            # ONE compilation for both phases: is_global is traced
+            self._jit_step = jax.jit(step_fn)
+        self.ucb = ucb_init(self.C, gamma=gamma)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._step = 0          # persistent: run() never replays keys
         self.meter = Meter()
         self.datasets = [lm_client_dataset(i, cfg.vocab_size,
                                            shape.seq_len, seed=seed)
@@ -80,7 +96,19 @@ class LMAdaSplitTrainer:
         self._rng = np.random.default_rng(seed)
         self.history = []
 
-    def run(self, total_steps: int, local_frac: float = None):
+    def _drain(self, pending):
+        """ONE host sync for a whole window of step metrics."""
+        fetched = jax.device_get([m for _, _, _, m in pending])
+        for (t, phase, summary, _), m in zip(pending, fetched):
+            self.history.append({"step": t, "phase": phase,
+                                 "l_client": float(m["l_client"]),
+                                 "ce": float(m["ce"]), **summary})
+        pending.clear()
+
+    def run(self, total_steps: int, local_frac: float = None,
+            log_every: int = 10):
+        """Run ``total_steps`` more steps (two-phase within this call's
+        window; the PRNG key schedule is persistent across calls)."""
         cfg, shape = self.cfg, self.shape
         local_steps = int(round((local_frac if local_frac is not None
                                  else self.kappa) * total_steps))
@@ -89,41 +117,37 @@ class LMAdaSplitTrainer:
         fl_c = transformer_flops_per_token(cfg, "client", shape.seq_len)
         fl_s = transformer_flops_per_token(cfg, "server", shape.seq_len)
         tokens_per_client = b * shape.seq_len
-        acts_bytes = b * shape.seq_len * cfg.d_model * 2  # bf16 payload
+        # bf16 split activations + int32 labels, per selected cohort
+        payload = split_payload_bytes((b, shape.seq_len, cfg.d_model), b,
+                                      dtype_bytes=2)
 
+        pending = []
         for t in range(total_steps):
             raw = next(it)
             batch = make_batch(cfg, raw, self.C)
             batch = add_extras(cfg, batch, shape.global_batch,
                                shape.seq_len, self._rng)
             global_phase = t >= local_steps
-            if global_phase:
-                selected = self.orch.select()
-                sel = np.zeros((self.C,), np.float32)
-                sel[selected] = 1.0
-                batch["select"] = jnp.asarray(sel)
-            else:
-                batch["select"] = jnp.zeros((self.C,), jnp.float32)
 
             with self.mesh:
-                self.state, metrics = self._jit_step(self.state, batch)
+                key = jax.random.fold_in(self._base_key, self._step)
+                self._step += 1
+                self.state, self.ucb, metrics = self._jit_step(
+                    self.state, self.ucb, batch, key,
+                    jnp.asarray(global_phase))
 
-            # eq. 1-2 metering (per-protocol, host side)
+            # eq. 1-2 metering (per-protocol, host side; k is static)
             self.meter.add_client_flops(3 * fl_c * tokens_per_client
                                         * self.C)
             if global_phase:
-                for i in selected:
-                    self.meter.add_payload(acts_bytes + 4 * b)
+                for _ in range(self.k):
+                    self.meter.add_payload(payload)
                 self.meter.add_server_flops(
-                    3 * fl_s * tokens_per_client * len(selected))
-                ce = float(metrics["ce"])
-                self.orch.update(selected, [ce] * len(selected))
-            rec = {"step": t,
-                   "phase": "global" if global_phase else "local",
-                   "l_client": float(metrics["l_client"]),
-                   "ce": float(metrics["ce"]),
-                   **self.meter.summary()}
-            self.history.append(rec)
+                    3 * fl_s * tokens_per_client * self.k)
+            pending.append((t, "global" if global_phase else "local",
+                            self.meter.summary(), metrics))
+            if (t + 1) % log_every == 0 or t == total_steps - 1:
+                self._drain(pending)
         return self.history
 
 
@@ -136,6 +160,7 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--kappa", type=float, default=0.5)
     ap.add_argument("--eta", type=float, default=0.6)
+    ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
 
@@ -149,7 +174,7 @@ def main():
     tr = LMAdaSplitTrainer(cfg, mesh, shape, policy, kappa=args.kappa,
                            eta=args.eta)
     t0 = time.time()
-    hist = tr.run(args.steps)
+    hist = tr.run(args.steps, log_every=args.log_every)
     for h in hist[:: max(1, len(hist) // 10)]:
         print(json.dumps(h))
     print(f"done {args.steps} steps in {time.time()-t0:.1f}s; "

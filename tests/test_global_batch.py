@@ -29,7 +29,11 @@ def clients8():
 
 
 def _train(clients, **kw):
-    defaults = dict(rounds=3, kappa=0.0, batch_size=16, seed=7)
+    # round_scan=False: this module tests the PR-1 per-iteration batched
+    # machinery in isolation (the round scan has its own differential
+    # suite in test_round_scan.py)
+    defaults = dict(rounds=3, kappa=0.0, batch_size=16, seed=7,
+                    round_scan=False)
     defaults.update(kw)
     tr = AdaSplitTrainer(CFG, AdaSplitHParams(**defaults), clients)
     tr.train(eval_every=10)

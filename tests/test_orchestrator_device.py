@@ -1,0 +1,163 @@
+"""Functional (on-device) UCB orchestrator: invariants + differentials.
+
+The host :class:`Orchestrator` is a thin wrapper over the pure
+``ucb_*`` functions, so (a) its selections must be BIT-identical to
+driving the functional state directly with the same key schedule, and
+(b) the incrementally-maintained discounted sums must agree with the
+vectorized full-history advantage.  No hypothesis dependency here —
+these run in a bare env (property twins live in test_protocol.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.orchestrator import (Orchestrator, ucb_advantage, ucb_init,
+                                     ucb_new_round, ucb_select, ucb_update)
+
+GAMMA = 0.87
+
+
+def _drive(state, idx, losses, n, gamma=GAMMA):
+    mask = np.zeros((n,), np.float32)
+    mask[idx] = 1.0
+    dense = np.zeros((n,), np.float32)
+    dense[np.asarray(idx)] = losses
+    return ucb_update(state, jnp.asarray(mask), jnp.asarray(dense),
+                      gamma=gamma)
+
+
+# ---------------------------------------------------------------------------
+# differential: host wrapper == functional math, bit-identical selections
+# ---------------------------------------------------------------------------
+
+
+def test_host_wrapper_selections_bitwise_equal_functional():
+    n, eta, seed = 9, 0.5, 3
+    o = Orchestrator(n, eta, GAMMA, seed=seed)
+    state = ucb_init(n, gamma=GAMMA)
+    rng = np.random.default_rng(0)
+    counter = 0
+    for _ in range(3):                       # rounds
+        for _ in range(5):                   # iterations
+            idx = np.asarray(ucb_select(state, o.k,
+                                        o.select_key(counter)))
+            np.testing.assert_array_equal(idx, o.select())
+            losses = rng.uniform(0.0, 10.0, o.k).astype(np.float32)
+            state = _drive(state, idx, losses, n)
+            o.update(idx, losses)
+            counter += 1
+        state = ucb_new_round(state, gamma=GAMMA)
+        o.new_round()
+    for k in ("l_disc", "s_disc", "last", "prev", "t"):
+        np.testing.assert_array_equal(np.asarray(state[k]),
+                                      np.asarray(o.state[k]), err_msg=k)
+
+
+def test_incremental_state_matches_vectorized_history_advantage():
+    """The O(N) incremental sums == the (vectorized) O(N*T) full-history
+    discounted sums (eq. 6) to fp tolerance, including across resets."""
+    n = 8
+    o = Orchestrator(n, 0.5, GAMMA, seed=1)
+    rng = np.random.default_rng(7)
+    for it in range(20):
+        np.testing.assert_allclose(np.asarray(ucb_advantage(o.state)),
+                                   o.advantage(), rtol=1e-4, atol=1e-4)
+        sel = o.select()
+        o.update(sel, rng.uniform(0.0, 10.0, len(sel)))
+        if it % 7 == 6:
+            o.new_round()
+
+
+def test_ingest_round_equals_sequential_updates():
+    """Absorbing stacked (T, k) round outputs must leave the host in the
+    same state as T sequential update() calls."""
+    n, T = 6, 4
+    rng = np.random.default_rng(5)
+    idx_all = np.stack([np.sort(rng.choice(n, size=3, replace=False))
+                        for _ in range(T)])
+    loss_all = rng.uniform(0, 5, (T, 3)).astype(np.float32)
+
+    seq = Orchestrator(n, 0.5, GAMMA, seed=0)
+    for t in range(T):
+        seq.update(idx_all[t], loss_all[t])
+    bat = Orchestrator(n, 0.5, GAMMA, seed=0)
+    bat.ingest_round(idx_all, loss_all)
+
+    np.testing.assert_array_equal(seq.L, bat.L)
+    np.testing.assert_array_equal(seq.S, bat.S)
+    for k in ("l_disc", "s_disc", "last", "prev", "t"):
+        np.testing.assert_array_equal(np.asarray(seq.state[k]),
+                                      np.asarray(bat.state[k]), err_msg=k)
+    assert seq._n_selects == 0 and bat._n_selects == T
+
+
+# ---------------------------------------------------------------------------
+# invariants (numpy-randomized twins of the hypothesis properties)
+# ---------------------------------------------------------------------------
+
+
+def test_ucb_select_invariants_random():
+    rng = np.random.default_rng(2)
+    for _ in range(20):
+        n = int(rng.integers(2, 16))
+        k = int(rng.integers(1, n + 1))
+        state = ucb_init(n, gamma=GAMMA)
+        state = _drive(state, rng.choice(n, size=k, replace=False),
+                       rng.uniform(0, 9, k).astype(np.float32), n)
+        idx = np.asarray(ucb_select(state, k,
+                                    jax.random.PRNGKey(int(rng.integers(99)))))
+        assert idx.shape == (k,)
+        assert len(set(idx.tolist())) == k
+        assert ((0 <= idx) & (idx < n)).all()
+        assert (np.diff(idx) > 0).all() or k == 1   # sorted ascending
+
+
+def test_ucb_update_rules():
+    n = 5
+    state = ucb_init(n, gamma=GAMMA)
+    last = np.asarray(state["last"]).copy()
+    prev = np.asarray(state["prev"]).copy()
+    l0 = np.asarray(state["l_disc"]).copy()
+    s0 = np.asarray(state["s_disc"]).copy()
+    idx = np.asarray([1, 3])
+    losses = np.asarray([2.5, 7.0], np.float32)
+    new = _drive(state, idx, losses, n)
+
+    exp_l = (last + prev) / 2.0           # unselected decay rule
+    exp_l[idx] = losses                   # selected take their CE
+    np.testing.assert_allclose(np.asarray(new["last"]), exp_l, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(new["prev"]), last, rtol=0)
+    mask = np.zeros(n, np.float32)
+    mask[idx] = 1.0
+    np.testing.assert_allclose(np.asarray(new["l_disc"]),
+                               GAMMA * l0 + exp_l, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(new["s_disc"]),
+                               GAMMA * s0 + mask, rtol=1e-6)
+    assert int(new["t"]) == int(state["t"]) + 1
+
+
+def test_ucb_new_round_reset():
+    n = 4
+    state = ucb_init(n, gamma=GAMMA)
+    state = _drive(state, [0, 2], np.asarray([1.0, 9.0], np.float32), n)
+    last = np.asarray(state["last"]).copy()
+    state = ucb_new_round(state, gamma=GAMMA)
+    np.testing.assert_allclose(np.asarray(state["l_disc"]),
+                               last * (1 + GAMMA), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(state["s_disc"]),
+                               np.full(n, 1 + GAMMA, np.float32), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(state["prev"]), last, rtol=0)
+    assert int(state["t"]) == 2
+
+
+def test_select_is_pure_and_key_sensitive():
+    """Same (state, key) -> same selection; at an exact tie, different
+    keys can break it differently (the jitter's whole job)."""
+    n, k = 6, 3
+    state = ucb_init(n, gamma=GAMMA)    # all-equal advantage: pure tie
+    a = np.asarray(ucb_select(state, k, jax.random.PRNGKey(0)))
+    b = np.asarray(ucb_select(state, k, jax.random.PRNGKey(0)))
+    np.testing.assert_array_equal(a, b)
+    picks = {tuple(np.asarray(ucb_select(state, k, jax.random.PRNGKey(s))))
+             for s in range(40)}
+    assert len(picks) > 1

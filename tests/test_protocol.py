@@ -148,6 +148,72 @@ def test_orchestrator_unselected_loss_decay():
 
 
 # ---------------------------------------------------------------------------
+# Functional UCB orchestrator (hypothesis twins of
+# test_orchestrator_device.py's numpy-randomized invariants)
+# ---------------------------------------------------------------------------
+
+
+@given(n=st.integers(2, 16), data=st.data(), key_seed=st.integers(0, 99))
+@settings(max_examples=30, deadline=None)
+def test_ucb_select_property(n, data, key_seed):
+    """k distinct in-range sorted ids, for ANY reachable state."""
+    from repro.core.orchestrator import ucb_init, ucb_select, ucb_update
+    k = data.draw(st.integers(1, n))
+    state = ucb_init(n, gamma=0.87)
+    for _ in range(data.draw(st.integers(0, 3))):
+        mask = np.zeros(n, np.float32)
+        sel = data.draw(st.lists(st.integers(0, n - 1), min_size=1,
+                                 max_size=n, unique=True))
+        mask[sel] = 1.0
+        losses = np.asarray(data.draw(st.lists(
+            st.floats(0.0, 50.0), min_size=n, max_size=n)), np.float32)
+        state = ucb_update(state, jnp.asarray(mask), jnp.asarray(losses),
+                           gamma=0.87)
+    idx = np.asarray(ucb_select(state, k, jax.random.PRNGKey(key_seed)))
+    assert idx.shape == (k,)
+    assert len(set(idx.tolist())) == k
+    assert ((0 <= idx) & (idx < n)).all()
+    assert (np.diff(idx) >= 1).all() or k == 1
+
+
+@given(n=st.integers(2, 12), data=st.data(),
+       gamma=st.floats(0.5, 0.99))
+@settings(max_examples=30, deadline=None)
+def test_ucb_update_and_reset_property(n, data, gamma):
+    """Selected clients take their CE, unselected decay by the
+    two-point mean; new_round resets to L=[last, last], S=[1, 1]."""
+    from repro.core.orchestrator import ucb_init, ucb_new_round, ucb_update
+    state = ucb_init(n, gamma=gamma)
+    sel = data.draw(st.lists(st.integers(0, n - 1), min_size=1,
+                             max_size=n, unique=True))
+    mask = np.zeros(n, np.float32)
+    mask[sel] = 1.0
+    losses = np.asarray(data.draw(st.lists(
+        st.floats(0.0, 50.0), min_size=n, max_size=n)), np.float32)
+    last = np.asarray(state["last"])
+    prev = np.asarray(state["prev"])
+    s0 = np.asarray(state["s_disc"])
+    new = ucb_update(state, jnp.asarray(mask), jnp.asarray(losses),
+                     gamma=gamma)
+    exp_l = (last + prev) / 2.0
+    exp_l[sel] = losses[sel]
+    np.testing.assert_allclose(np.asarray(new["last"]), exp_l,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(new["s_disc"]),
+                               gamma * s0 + mask, rtol=1e-5)
+    assert int(new["t"]) == int(state["t"]) + 1
+
+    reset = ucb_new_round(new, gamma=gamma)
+    np.testing.assert_allclose(np.asarray(reset["l_disc"]),
+                               np.asarray(new["last"]) * (1 + gamma),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(reset["s_disc"]),
+                               np.full(n, 1 + gamma, np.float32),
+                               rtol=1e-5)
+    assert int(reset["t"]) == 2
+
+
+# ---------------------------------------------------------------------------
 # C3-Score (eq. 9) properties
 # ---------------------------------------------------------------------------
 
