@@ -23,16 +23,21 @@ from repro.data.synthetic import mixed_cifar, mixed_noniid
 
 @dataclass(frozen=True)
 class Scale:
+    name: str
     n_clients: int
     n_per_client: int
     n_test: int
     rounds: int
 
+    @property
+    def smoke(self) -> bool:
+        return self.name == "smoke"
+
 
 SCALES = {
-    "smoke": Scale(3, 160, 60, 4),
-    "std": Scale(5, 400, 120, 16),
-    "paper": Scale(5, 1000, 200, 20),
+    "smoke": Scale("smoke", 3, 160, 60, 4),
+    "std": Scale("std", 5, 400, 120, 16),
+    "paper": Scale("paper", 5, 1000, 200, 20),
 }
 
 

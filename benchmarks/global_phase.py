@@ -79,7 +79,7 @@ def _round_time(clients, **hp_kw):
 
 def main():
     sc = scale()
-    sizes = [32] if sc.rounds <= 4 else [32, 64]
+    sizes = [32] if sc.smoke else [32, 64]
     rows = []
     for n in sizes:
         clients = mixed_noniid(n_clients=n, n_per_client=PER_CLIENT,

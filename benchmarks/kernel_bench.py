@@ -6,6 +6,13 @@ we report each kernel's ANALYTIC traffic model: HBM bytes touched by
 the fused kernel vs by the unfused XLA reference, which is the number
 the §Perf hillclimb uses.  The XLA reference path wall-time on CPU is a
 real apples-to-apples measurement of the math (both jit'd).
+
+The ``client_step`` section is different: both sides are real XLA
+lowerings of the stacked per-client conv (the AdaSplit client-step hot
+path), grouped-conv vmap vs the im2col batched GEMM
+(``kernels/client_conv``) — an honest CPU wall measurement of what
+``batched_conv=True`` buys.  ``--scale=smoke`` shrinks the client count
+for the CI bench-smoke lane; std/paper run the N=32 acceptance shape.
 """
 from __future__ import annotations
 
@@ -15,19 +22,71 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, scale
 from repro.core.losses import ntxent_supervised
 from repro.kernels import ref
 from repro.models.attention import mha_chunked
 
 
 def wall(fn, *args, reps=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
-        else jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))     # warmup: compile (pytree-safe)
     t0 = time.time()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.time() - t0) / reps * 1e6  # us
+
+
+def client_step_section():
+    """Stacked per-client conv: grouped-conv vmap (the seed lowering)
+    vs the batched-GEMM path.  Three rows, all real XLA lowerings:
+
+    * fwd — the stacked forward.
+    * fwd+grad (vmap of per-client grad) — the ``client_step`` hot-path
+      lowering: ``jax.vmap(jax.grad(...))``.
+    * fwd+grad (grad of stacked loss) — ``jax.grad`` OUTSIDE the client
+      vmap, the lowering the joint / stacked-loss paths (e.g.
+      ``flat_joint``) take.  Differentiating THROUGH the feature-group
+      conv transposes it into the grouped form XLA:CPU collapses on —
+      this is where the batched GEMM wins by orders of magnitude.
+    """
+    from repro.kernels import client_conv as cc
+    C = 8 if scale().smoke else 32
+    B, H, W, Cin, Cout = 4, 32, 32, 3, 6
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(C, B, H, W, Cin)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(C, 5, 5, Cin, Cout)), jnp.float32)
+
+    def fwd(method):
+        return jax.jit(lambda x, w: cc.client_conv(x, w, method=method))
+
+    def one_loss(method):
+        def loss(w, x):
+            return jnp.mean(cc.client_conv(x, w, method=method) ** 2)
+        return loss
+
+    def vmap_grad(method):                 # client_step lowering
+        return jax.jit(jax.vmap(jax.grad(one_loss(method))))
+
+    def grad_stacked(method):              # joint/stacked-loss lowering
+        return jax.jit(jax.grad(one_loss(method)))
+
+    shp = f"C={C},B={B},{H}x{W}x{Cin}->{Cout},5x5"
+    rows = []
+    t_gf = wall(fwd("conv"), x, w, reps=2)
+    t_ef = wall(fwd("einsum"), x, w, reps=2)
+    rows.append(["client_step fwd", shp, f"{t_gf:.0f}", f"{t_ef:.0f}",
+                 f"{t_gf / max(t_ef, 1e-9):.1f}x"])
+    t_gv = wall(vmap_grad("conv"), w, x, reps=2)
+    t_ev = wall(vmap_grad("einsum"), w, x, reps=2)
+    rows.append(["client_step fwd+grad (vmap.grad)", shp, f"{t_gv:.0f}",
+                 f"{t_ev:.0f}", f"{t_gv / max(t_ev, 1e-9):.1f}x"])
+    t_gs = wall(grad_stacked("conv"), w, x, reps=1)   # grouped bwd: SLOW
+    t_es = wall(grad_stacked("einsum"), w, x, reps=2)
+    rows.append(["stacked-loss fwd+grad (grad.vmap)", shp, f"{t_gs:.0f}",
+                 f"{t_es:.0f}", f"{t_gs / max(t_es, 1e-9):.1f}x"])
+    emit("client_step conv (grouped-conv vmap vs im2col batched GEMM, "
+         "wall us on CPU)", rows,
+         ["op", "shape", "grouped_us", "batched_gemm_us", "speedup"])
 
 
 def flash_traffic(B, Hq, Hkv, S, hd, bq=128, bk=128, dtype_bytes=2):
@@ -97,6 +156,8 @@ def main():
          "fused-vs-unfused)", rows,
          ["kernel", "shape", "xla_ref_us", "fused_traffic",
           "unfused_traffic", "traffic_ratio"])
+
+    client_step_section()
 
 
 if __name__ == "__main__":

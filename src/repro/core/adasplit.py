@@ -49,7 +49,20 @@ implementations for the differential tests and benchmarks
 (``benchmarks/round_scan.py``, ``benchmarks/global_phase.py``).
 ``fused_mask_adam=True`` routes the per-client mask updates through the
 fused Pallas masked-Adam kernel on TPU (``kernels/masked_adam``),
-falling back to ``adam_update`` elsewhere.
+falling back to ``adam_update`` elsewhere; ``fused_server_adam=True``
+does the same for the server optimizer step under the same
+TPU-native/fallback gating (both opt-in until benchmarked natively on
+a real TPU).
+
+``batched_conv=True`` (default) lowers every per-client conv in the hot
+path — the vmapped client step, the joint step's client part, the
+per-scalar server vmap, and ``_eval_all`` — through the im2col
+batched-GEMM form (``kernels/client_conv``): one
+``(C, B*H*W, K*K*Cin) @ (C, K*K*Cin, Cout)`` dispatch in forward AND
+backward, replacing the feature-group conv XLA:CPU executes
+group-serially (its transposed backward is ~70x slower than the GEMM
+form at C=32).  ``batched_conv=False`` keeps the
+``lax.conv_general_dilated`` lowering as the reference path.
 
 The LM/pod-scale variant of the same protocol lives in
 ``repro.launch.train`` (batched cohorts on the device mesh, with the
@@ -72,6 +85,7 @@ from repro.core.c3 import c3_score
 from repro.core.losses import (accuracy, cross_entropy, l1_penalty,
                                ntxent_supervised)
 from repro.core.orchestrator import Orchestrator, ucb_select, ucb_update
+from repro.kernels.client_conv import client_proj
 from repro.models import lenet
 from repro.optim.adam import adam_init, adam_update
 
@@ -96,6 +110,8 @@ class AdaSplitHParams:
     round_scan: bool = True         # whole round under one jitted lax.scan
     flat_joint: bool = True         # S*B-flattened joint step (vs vmap ref)
     fused_mask_adam: bool = False   # Pallas fused mask update (TPU only)
+    fused_server_adam: bool = False  # Pallas fused server Adam (TPU only)
+    batched_conv: bool = True       # im2col batched-GEMM convs (False = ref)
     seed: int = 0
 
 
@@ -108,8 +124,7 @@ def _proj_init(key, in_dim, proj_dim):
 
 def _proj_apply(p, acts):
     h = acts.reshape(acts.shape[0], -1).astype(jnp.float32)
-    h = jax.nn.relu(h @ p["w1"] + p["b1"])
-    return h @ p["w2"]
+    return client_proj(p, h)
 
 
 class AdaSplitTrainer:
@@ -163,19 +178,31 @@ class AdaSplitTrainer:
 
     def _compile(self):
         cfg, hp = self.cfg, self.hp
-        use_fused = hp.fused_mask_adam and jax.default_backend() == "tpu"
-        if use_fused:
-            from repro.kernels.masked_adam import fused_adam_update
+        bc = hp.batched_conv
+        on_tpu = jax.default_backend() == "tpu"
 
-            def mask_adam(m, gm, mo):
-                return fused_adam_update(m, gm, mo, lr=hp.lr,
-                                         interpret=False)
-        else:
-            def mask_adam(m, gm, mo):
-                return adam_update(m, gm, mo, lr=hp.lr)
+        def gated_adam(fused: bool):
+            """Adam step behind the shared TPU-native/fallback gate:
+            the fused Pallas kernel (one HBM pass per leaf) when the
+            flag is on AND we're on TPU, plain ``adam_update``
+            elsewhere (bit-identical fallback)."""
+            if fused and on_tpu:
+                from repro.kernels.masked_adam import fused_adam_update
+
+                def step(p, g, o):
+                    return fused_adam_update(p, g, o, lr=hp.lr,
+                                             interpret=False)
+            else:
+                def step(p, g, o):
+                    return adam_update(p, g, o, lr=hp.lr)
+            return step
+
+        mask_adam = gated_adam(hp.fused_mask_adam)
+        server_adam = gated_adam(hp.fused_server_adam)
 
         def client_loss(cp_pp, x, y):
-            acts = lenet.client_forward(cfg, cp_pp["c"], x)
+            acts = lenet.client_forward(cfg, cp_pp["c"], x,
+                                        batched_conv=bc)
             q = _proj_apply(cp_pp["p"], acts)
             loss = ntxent_supervised(q, y, hp.tau)
             if hp.act_l1:
@@ -196,10 +223,12 @@ class AdaSplitTrainer:
         def server_loss(sp, mask_i, acts, y):
             if hp.mask_mode == "per_scalar":
                 eff = masks_mod.apply_scalar_masks(sp, mask_i)
-                logits, _ = lenet.server_forward(cfg, eff, acts)
+                logits, _ = lenet.server_forward(cfg, eff, acts,
+                                                 batched_conv=bc)
             else:
                 logits, _ = lenet.server_forward(cfg, sp, acts,
-                                                 gates=mask_i)
+                                                 gates=mask_i,
+                                                 batched_conv=bc)
             loss = cross_entropy(logits, y)
             return loss + hp.lam * l1_penalty(mask_i), loss
 
@@ -207,7 +236,7 @@ class AdaSplitTrainer:
             (total, ce), g = jax.value_and_grad(server_loss, argnums=(0, 1),
                                                 has_aux=True)(sp, mask_i,
                                                               acts, y)
-            sp, s_opt = adam_update(sp, g[0], s_opt, lr=hp.lr)
+            sp, s_opt = server_adam(sp, g[0], s_opt)
             mask_i, m_opt_i = adam_update(mask_i, g[1], m_opt_i, lr=hp.lr)
             return sp, s_opt, mask_i, m_opt_i, ce
 
@@ -215,15 +244,18 @@ class AdaSplitTrainer:
 
         def joint_loss(cp_pp, sp, mask_i, x, y):
             """Table-5 ablation: client also receives the server CE grad."""
-            acts = lenet.client_forward(cfg, cp_pp["c"], x)
+            acts = lenet.client_forward(cfg, cp_pp["c"], x,
+                                        batched_conv=bc)
             q = _proj_apply(cp_pp["p"], acts)
             lc = ntxent_supervised(q, y, hp.tau)
             if hp.mask_mode == "per_scalar":
                 eff = masks_mod.apply_scalar_masks(sp, mask_i)
-                logits, _ = lenet.server_forward(cfg, eff, acts)
+                logits, _ = lenet.server_forward(cfg, eff, acts,
+                                                 batched_conv=bc)
             else:
                 logits, _ = lenet.server_forward(cfg, sp, acts,
-                                                 gates=mask_i)
+                                                 gates=mask_i,
+                                                 batched_conv=bc)
             ce = cross_entropy(logits, y)
             return lc + ce + hp.lam * l1_penalty(mask_i), ce
 
@@ -232,7 +264,7 @@ class AdaSplitTrainer:
                                             has_aux=True)(cp_pp, sp, mask_i,
                                                           x, y)
             cp_pp, c_opt_i = adam_update(cp_pp, g[0], c_opt_i, lr=hp.lr)
-            sp, s_opt = adam_update(sp, g[1], s_opt, lr=hp.lr)
+            sp, s_opt = server_adam(sp, g[1], s_opt)
             mask_i, m_opt_i = adam_update(mask_i, g[2], m_opt_i, lr=hp.lr)
             return cp_pp, c_opt_i, sp, s_opt, mask_i, m_opt_i, ce
 
@@ -267,7 +299,7 @@ class AdaSplitTrainer:
             global phase scale with hardware batch efficiency."""
             gates = jax.tree.map(lambda l: l[seg_ids], masks_sel)
             logits, _ = lenet.server_forward(cfg, sp, acts_flat,
-                                             gates=gates)
+                                             gates=gates, batched_conv=bc)
             ces = seg_ces(logits, y_flat, S)
             total = jnp.sum(ces) + hp.lam * l1_penalty(masks_sel) * S
             return total, ces
@@ -291,7 +323,7 @@ class AdaSplitTrainer:
                 (_, ces), g = jax.vmap(grad_fn, in_axes=(None, 0, 0, 0))(
                     sp, masks_sel, acts_sel, ys_sel)
                 g_sp = jax.tree.map(lambda t: jnp.mean(t, axis=0), g[0])
-                sp, s_opt = adam_update(sp, g_sp, s_opt, lr=hp.lr)
+                sp, s_opt = server_adam(sp, g_sp, s_opt)
                 masks_sel, m_opt_sel = jax.vmap(mask_adam)(
                     masks_sel, g[1], m_opt_sel)
             else:
@@ -303,7 +335,7 @@ class AdaSplitTrainer:
                     sp, masks_sel, acts_flat, ys_sel.reshape(-1), seg_ids,
                     S)
                 g_sp = jax.tree.map(lambda t: t / S, g[0])
-                sp, s_opt = adam_update(sp, g_sp, s_opt, lr=hp.lr)
+                sp, s_opt = server_adam(sp, g_sp, s_opt)
                 masks_sel, m_opt_sel = jax.vmap(mask_adam)(
                     masks_sel, g[1], m_opt_sel)
             return sp, s_opt, masks_sel, m_opt_sel, ces, fracs
@@ -321,7 +353,8 @@ class AdaSplitTrainer:
             client's own, grad wrt sp the sum (mean = /S outside) —
             identical math to the vmap of ``joint_loss``."""
             def client_part(cp_pp, x):
-                acts = lenet.client_forward(cfg, cp_pp["c"], x)
+                acts = lenet.client_forward(cfg, cp_pp["c"], x,
+                                            batched_conv=bc)
                 q = _proj_apply(cp_pp["p"], acts)
                 return acts, q
 
@@ -332,7 +365,7 @@ class AdaSplitTrainer:
             acts_flat = acts.reshape((S * B,) + acts.shape[2:])
             gates = jax.tree.map(lambda l: l[seg_ids], masks_sel)
             logits, _ = lenet.server_forward(cfg, sp, acts_flat,
-                                             gates=gates)
+                                             gates=gates, batched_conv=bc)
             ces = seg_ces(logits, ys_sel.reshape(-1), S)
             total = jnp.sum(lcs) + jnp.sum(ces) \
                 + hp.lam * l1_penalty(masks_sel) * S
@@ -363,7 +396,7 @@ class AdaSplitTrainer:
                     lambda c, gc, co: adam_update(c, gc, co, lr=hp.lr))(
                     cp_sel, g[0], c_opt_sel)
                 g_sp = jax.tree.map(lambda t: t / S, g[1])
-                sp, s_opt = adam_update(sp, g_sp, s_opt, lr=hp.lr)
+                sp, s_opt = server_adam(sp, g_sp, s_opt)
                 masks_sel, m_opt_sel = jax.vmap(mask_adam)(
                     masks_sel, g[2], m_opt_sel)
             else:
@@ -376,7 +409,7 @@ class AdaSplitTrainer:
                     lambda c, gc, co: adam_update(c, gc, co, lr=hp.lr))(
                     cp_sel, g[0], c_opt_sel)
                 g_sp = jax.tree.map(lambda t: jnp.mean(t, axis=0), g[1])
-                sp, s_opt = adam_update(sp, g_sp, s_opt, lr=hp.lr)
+                sp, s_opt = server_adam(sp, g_sp, s_opt)
                 masks_sel, m_opt_sel = jax.vmap(mask_adam)(
                     masks_sel, g[2], m_opt_sel)
             return (cp_sel, c_opt_sel, sp, s_opt, masks_sel, m_opt_sel,
@@ -386,12 +419,14 @@ class AdaSplitTrainer:
         self._global_joint_step = jax.jit(global_joint_step)
 
         def eval_client(cp, sp, mask_i, x, y):
-            acts = lenet.client_forward(cfg, cp, x)
+            acts = lenet.client_forward(cfg, cp, x, batched_conv=bc)
             if hp.mask_mode == "per_scalar":
                 eff = masks_mod.apply_scalar_masks(sp, mask_i)
-                logits, _ = lenet.server_forward(cfg, eff, acts)
+                logits, _ = lenet.server_forward(cfg, eff, acts,
+                                                 batched_conv=bc)
             else:
-                logits, _ = lenet.server_forward(cfg, sp, acts, gates=mask_i)
+                logits, _ = lenet.server_forward(cfg, sp, acts, gates=mask_i,
+                                                 batched_conv=bc)
             return accuracy(logits, y)
 
         self._eval_client = jax.jit(eval_client)

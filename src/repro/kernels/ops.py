@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import client_conv as _cc
 from repro.kernels import flash_attention as _fa
 from repro.kernels import masked_adam as _ma
 from repro.kernels import ntxent as _nt
@@ -41,6 +42,14 @@ def flash_attention(q, k, v, causal: bool = True, window: int = 0,
 @functools.partial(jax.jit, static_argnames=("threshold",))
 def soft_threshold(x, threshold: float):
     return _st.soft_threshold(x, threshold, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("method",))
+def client_conv(x, w, method: str = None):
+    """Stacked-client conv as one batched GEMM.  x (C, B, H, W, Cin),
+    w (C, K, K, Cin, Cout) (client axis optional on both); method None
+    = backend default (pallas on TPU, einsum elsewhere)."""
+    return _cc.client_conv(x, w, method=method)
 
 
 @functools.partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps"))

@@ -59,6 +59,20 @@ def soft_threshold_ref(x, threshold):
             ).astype(x.dtype)
 
 
+def client_conv_ref(x, w):
+    """Grouped-conv oracle for the stacked-client conv: per-client
+    ``lax.conv_general_dilated`` (the seed lowering — what ``vmap``
+    turns into a feature-group conv).  x (C, B, H, W, Cin) with
+    w (C, K, K, Cin, Cout), or unstacked 4D w."""
+    def one(x, w):
+        return jax.lax.conv_general_dilated(
+            x, w.astype(x.dtype), window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if w.ndim == 4:
+        return one(x, w)
+    return jax.vmap(one)(x, w)
+
+
 def masked_adam_ref(p, g, mu, nu, mask, *, lr, b1, b2, eps, b1t, b2t):
     """Fused AdaSplit server update (eq. 7): grad masked, Adam applied."""
     gf = g.astype(jnp.float32) * mask.astype(jnp.float32)

@@ -38,6 +38,7 @@ from repro.core import masks as masks_mod
 from repro.core import orchestrator as orch_mod
 from repro.core.losses import (chunked_cross_entropy, l1_penalty,
                                ntxent_supervised)
+from repro.kernels.client_conv import client_proj
 from repro.models import transformer as tfm
 from repro.models import decode as dec
 from repro.optim.adam import adam_init, adam_update
@@ -345,8 +346,11 @@ def build_train_step(cfg: ModelConfig, mesh, shape: InputShape,
                                   attn_out_shard=out_inner,
                                   moe_constrain=moe_inner)
         pooled = jnp.mean(acts.astype(jnp.float32), axis=1)   # (b', D)
-        h = jax.nn.relu(pooled @ cp["proj"]["w1"] + cp["proj"]["b1"])
-        q = h @ cp["proj"]["w2"]
+        # client-axis-aware projection (kernels/client_conv.client_proj):
+        # under this cohort vmap the per-cohort GEMMs batch into ONE
+        # (C, b', D) @ (C, D, H') dispatch — the dense analogue of the
+        # stacked client conv.
+        q = client_proj(cp["proj"], pooled)
         loss = ntxent_supervised(q, seq_class_b, policy.tau)
         return loss, acts
 

@@ -6,6 +6,14 @@ bottom ``split`` blocks, server the rest plus the FC head.  Server unit
 gates (AdaSplit structured masks) act on conv output channels and FC
 hidden units; the per-scalar paper-faithful mask path is handled by the
 optimizer (core/masks.py) instead.
+
+``batched_conv=True`` routes every conv through the im2col batched-GEMM
+form (``kernels/client_conv``): under a per-client ``vmap`` (or called
+directly on stacked (C, ...) params — ``_conv_block`` is client-axis
+aware) the stacked conv lowers to ONE batched GEMM instead of the
+group-serial feature-group conv, in forward and backward alike.  The
+``lax.conv_general_dilated`` path (``batched_conv=False``) stays as the
+differential-test reference.
 """
 from __future__ import annotations
 
@@ -14,22 +22,44 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.client_conv import client_conv
+
 
 def _conv_init(key, cin, cout, k=5):
     w = jax.random.normal(key, (k, k, cin, cout)) * jnp.sqrt(2.0 / (k * k * cin))
     return {"w": w, "b": jnp.zeros((cout,))}
 
 
-def _conv_block(p, x, gate=None):
-    y = jax.lax.conv_general_dilated(
-        x, p["w"].astype(x.dtype), window_strides=(1, 1), padding="SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    y = jax.nn.relu(y + p["b"].astype(x.dtype))
+def _conv_block(p, x, gate=None, *, batched_conv=False, conv_method=None):
+    """One conv+ReLU+maxpool block, client axis optional.
+
+    Unstacked: x (B, H, W, Cin), w (K, K, Cin, Cout).  Stacked: x
+    (C, B, H, W, Cin) with w (C, K, K, Cin, Cout) — the whole client
+    stack in one call (one batched GEMM with ``batched_conv=True``).
+    """
+    w = p["w"].astype(x.dtype)
+    if batched_conv or w.ndim == 5:
+        y = client_conv(x, w, method=conv_method if batched_conv
+                        else "conv")
+    else:
+        y = jax.lax.conv_general_dilated(
+            x, w, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    b = p["b"].astype(x.dtype)
+    if b.ndim > 1:                       # stacked (C, Cout) bias
+        b = b.reshape(b.shape[:-1] + (1, 1, 1) + b.shape[-1:])
+    y = jax.nn.relu(y + b)
     if gate is not None:
+        # leading gate axes align with y's leading axes, last is the
+        # unit axis: (U,) / per-example (B, U) / stacked (C, U) or
+        # (C, B, U) all broadcast over the spatial dims.
         g = gate.astype(x.dtype)
-        y = y * (g[None, None, None, :] if g.ndim == 1 else g[:, None, None, :])
+        g = g.reshape(g.shape[:-1] + (1,) * (y.ndim - g.ndim)
+                      + g.shape[-1:])
+        y = y * g
+    window = (1,) * (y.ndim - 3) + (2, 2, 1)
     return jax.lax.reduce_window(y, -jnp.inf, jax.lax.max,
-                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+                                 window, window, "VALID")
 
 
 def split_index(cfg) -> int:
@@ -73,25 +103,36 @@ def init_params(cfg, key):
             "server": init_server_params(cfg, ks)}
 
 
-def client_forward(cfg, p, images, extras=None, *, dtype=None, **_):
+def client_forward(cfg, p, images, extras=None, *, dtype=None,
+                   batched_conv=False, conv_method=None, **_):
+    """Client tower.  Works unstacked (one client: images (B, H, W, 3))
+    or stacked (all clients at once: images (C, B, H, W, 3) with
+    (C, ...)-leading params — one batched-GEMM dispatch per block)."""
     x = images.astype(dtype or jnp.float32)
     for bp in p["blocks"]:
-        x = _conv_block(bp, x)
+        x = _conv_block(bp, x, batched_conv=batched_conv,
+                        conv_method=conv_method)
     return x  # split activations (B, H', W', C)
 
 
 def server_forward(cfg, p, acts, tokens=None, extras=None, *, gates=None,
-                   **_):
+                   batched_conv=False, conv_method=None, **_):
     """gates: {"blocks": [...], "fc1": ..., "fc2": ...} with each leaf
     either (U,) — one client's unit mask shared across the batch — or
     (B, U) per-example gates.  The per-example form is what lets the
     batched global phase flatten S selected clients into ONE (S*B)
     forward (each example gated by its own client's mask row) and grab
-    per-client mask grads from the gather's scatter-add backward."""
+    per-client mask grads from the gather's scatter-add backward.
+
+    ``batched_conv`` swaps the server convs onto the same im2col GEMM
+    form as the client tower — relevant under the per-scalar vmap,
+    where per-client effective weights would otherwise lower to the
+    group-serial conv."""
     x = acts
     for i, bp in enumerate(p["blocks"]):
         g = gates["blocks"][i] if gates is not None else None
-        x = _conv_block(bp, x, gate=g)
+        x = _conv_block(bp, x, gate=g, batched_conv=batched_conv,
+                        conv_method=conv_method)
     x = x.reshape(x.shape[0], -1)
 
     def fc(pp, x, gate, act=True):

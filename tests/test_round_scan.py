@@ -97,6 +97,42 @@ def test_flat_joint_matches_vmap_joint(clients6):
 
 
 # ---------------------------------------------------------------------------
+# batched-GEMM convs (tentpole): reference-path differential
+# ---------------------------------------------------------------------------
+
+
+def test_batched_conv_matches_reference_path(clients6):
+    """``batched_conv=True`` (the im2col batched-GEMM lowering) vs the
+    ``lax.conv_general_dilated`` reference: selections and meter totals
+    bit-identical, model state to fp tolerance."""
+    gemm = _train(clients6)                       # batched_conv default on
+    ref = _train(clients6, batched_conv=False)
+    np.testing.assert_array_equal(gemm.orch.S, ref.orch.S)
+    assert gemm.meter.bandwidth_bytes == ref.meter.bandwidth_bytes
+    assert gemm.meter.client_flops == ref.meter.client_flops
+    assert gemm.meter.server_flops == ref.meter.server_flops
+    assert _max_leaf_diff(gemm.server_params, ref.server_params) < 2e-4
+    assert _max_leaf_diff(gemm.client_params, ref.client_params) < 2e-4
+    assert _max_leaf_diff(gemm.masks, ref.masks) < 2e-4
+    acc_g = gemm.history[-1]["accuracy"]
+    acc_r = ref.history[-1]["accuracy"]
+    assert abs(acc_g - acc_r) < 1.0, (acc_g, acc_r)
+
+
+@pytest.mark.slow
+def test_batched_conv_matches_reference_per_scalar(clients6):
+    """Per-scalar masks vmap the server conv with per-client effective
+    weights — the other grouped-conv site the GEMM form replaces."""
+    gemm = _train(clients6, kappa=0.0, rounds=2, mask_mode="per_scalar")
+    ref = _train(clients6, kappa=0.0, rounds=2, mask_mode="per_scalar",
+                 batched_conv=False)
+    np.testing.assert_array_equal(gemm.orch.S, ref.orch.S)
+    assert gemm.meter.bandwidth_bytes == ref.meter.bandwidth_bytes
+    assert _max_leaf_diff(gemm.server_params, ref.server_params) < 2e-4
+    assert _max_leaf_diff(gemm.masks, ref.masks) < 2e-4
+
+
+# ---------------------------------------------------------------------------
 # host-sync discipline: ONE device_get per global round
 # ---------------------------------------------------------------------------
 
@@ -201,6 +237,40 @@ def test_fused_mask_adam_flag_is_noop_off_tpu(clients6):
     off = _train(clients6, rounds=1, kappa=0.0)
     assert _max_leaf_diff(on.masks, off.masks) == 0.0
     assert _max_leaf_diff(on.server_params, off.server_params) == 0.0
+
+
+def test_fused_server_adam_interpret_parity():
+    """Satellite: the server Adam step through the fused Pallas kernel
+    (interpret mode) == plain adam_update on server-shaped params."""
+    from repro.configs.base import get_config
+    from repro.kernels.masked_adam import fused_adam_update
+    from repro.models import lenet
+    from repro.optim.adam import adam_init, adam_update
+    sp = lenet.init_server_params(get_config("lenet-cifar"),
+                                  jax.random.PRNGKey(3))
+    rng = np.random.default_rng(5)
+    grads = jax.tree.map(
+        lambda p: jnp.asarray(rng.normal(size=p.shape), jnp.float32), sp)
+    opt = adam_init(sp)
+    p_ref, o_ref = adam_update(sp, grads, opt, lr=1e-3)
+    p_fused, o_fused = fused_adam_update(sp, grads, opt, lr=1e-3,
+                                         interpret=True)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_fused)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+    for a, b in zip(jax.tree.leaves(o_ref["nu"]),
+                    jax.tree.leaves(o_fused["nu"])):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+    assert int(o_fused["step"]) == 1
+
+
+def test_fused_server_adam_flag_is_noop_off_tpu(clients6):
+    """``fused_server_adam`` gates on the backend exactly like the mask
+    flag: off-TPU both settings take the adam_update fallback."""
+    assert jax.default_backend() != "tpu"
+    on = _train(clients6, rounds=1, kappa=0.0, fused_server_adam=True)
+    off = _train(clients6, rounds=1, kappa=0.0)
+    assert _max_leaf_diff(on.server_params, off.server_params) == 0.0
+    assert _max_leaf_diff(on.masks, off.masks) == 0.0
 
 
 # ---------------------------------------------------------------------------
