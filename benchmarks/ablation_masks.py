@@ -8,7 +8,7 @@ collaboration benefit before we rely on it for the 10 LM archs.
 """
 from __future__ import annotations
 
-from benchmarks.common import dataset, emit, lenet_cfg, scale
+from benchmarks.common import dataset, emit, lenet_cfg, scale, write_bench_json
 from repro.core.adasplit import AdaSplitHParams, AdaSplitTrainer
 from repro.core.masks import sparsity
 
@@ -36,3 +36,4 @@ def main():
 
 if __name__ == "__main__":
     main()
+    write_bench_json("ablation_masks")

@@ -7,12 +7,22 @@ Scale profiles (env REPRO_BENCH_SCALE or --scale):
 
 Budgets for the C3-Score are the worst-performing method's consumption
 on the same run (the paper's §5 convention).
+
+Every table printed through :func:`emit` is also recorded in memory;
+:func:`write_bench_json` flushes the records to ``BENCH_<name>.json``
+(config + per-row values + host info) so the perf trajectory is
+machine-readable across PRs — each benchmark's ``__main__`` writes its
+own file, and ``benchmarks.run`` writes one per section plus the
+``BENCH_all.json`` aggregate.
 """
 from __future__ import annotations
 
 import csv
+import dataclasses
 import io
+import json
 import os
+import platform
 import sys
 import time
 from dataclasses import dataclass
@@ -58,8 +68,12 @@ def dataset(protocol: str, sc: Scale, seed: int = 0):
     return mk(sc.n_clients, sc.n_per_client, sc.n_test, seed=seed)
 
 
+_RECORDS: list = []
+
+
 def emit(table: str, rows, header):
-    """Print a CSV block (captured into bench_output.txt)."""
+    """Print a CSV block (captured into bench_output.txt) and record it
+    for the machine-readable ``BENCH_<name>.json`` dump."""
     buf = io.StringIO()
     w = csv.writer(buf)
     w.writerow(header)
@@ -68,6 +82,45 @@ def emit(table: str, rows, header):
     print(f"### {table}")
     print(buf.getvalue().rstrip())
     print()
+    _RECORDS.append({"table": table, "header": list(header),
+                     "rows": [[str(c) for c in r] for r in rows]})
+
+
+def host_info() -> dict:
+    import jax
+    return {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+    }
+
+
+def write_bench_json(name: str, extra: dict | None = None,
+                     out_dir: str = ".") -> str | None:
+    """Flush every table emitted since the last flush to
+    ``BENCH_<name>.json``.  Returns the path (None when nothing was
+    recorded — e.g. a section that crashed before its first emit)."""
+    if not _RECORDS:
+        return None
+    payload = {
+        "name": name,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "scale": dataclasses.asdict(scale()),
+        "argv": sys.argv,
+        "host": host_info(),
+        "tables": list(_RECORDS),
+    }
+    if extra:
+        payload.update(extra)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    _RECORDS.clear()
+    print(f"[bench json -> {path}]")
+    return path
 
 
 def c3_budgets(results):

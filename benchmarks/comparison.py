@@ -3,7 +3,8 @@ Mixed-CIFAR (accuracy, bandwidth GB, client (total) TFLOPs, C3-Score).
 """
 from __future__ import annotations
 
-from benchmarks.common import c3_budgets, dataset, emit, lenet_cfg, scale
+from benchmarks.common import (c3_budgets, dataset, emit, lenet_cfg,
+                               scale, write_bench_json)
 from repro.baselines import BASELINES, make_trainer
 from repro.core.adasplit import AdaSplitHParams, AdaSplitTrainer
 from repro.core.c3 import c3_score
@@ -73,3 +74,4 @@ def table2():
 if __name__ == "__main__":
     table1()
     table2()
+    write_bench_json("comparison")

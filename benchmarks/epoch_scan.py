@@ -1,0 +1,140 @@
+"""Epoch-resident training — R rounds per dispatch vs the PR-3
+per-round dispatch loop (this PR's tentpole).
+
+The PR-2/3 round scan already fused everything INSIDE a round, but
+still paid, per round: one jit dispatch over the full carry pytree, a
+host-side ``Orchestrator.new_round`` (a handful of eager device ops), a
+blocking ``device_get`` + Python billing, and serial re-staging of the
+next round's data while the device sat idle.  ``epoch_scan=True`` moves
+the round boundary itself in-graph (``ucb_new_round`` inside a rolled
+outer ``lax.scan``), so R x T iterations run in ONE dispatch with ONE
+``device_get`` per epoch, and the chunked two-slot staging ring
+overlaps the next chunk's host->device copy with the current chunk's
+compute.
+
+Per-iteration wall-clock (min-of-reps, compile and data-gen excluded)
+vs rounds-per-dispatch ∈ {1, 2, 8, R}:
+
+  * chunk=1 degenerates to per-round dispatches (but keeps the deferred
+    single epoch sync + in-graph round boundary) — isolates the sync /
+    billing deferral from dispatch amortization;
+  * chunk=R is the fully device-resident epoch — the accelerator fast
+    path, where dispatch overhead dominates short rounds.
+
+Acceptance (paper LeNet config, CI CPU box): best epoch row >= 1.15x
+per-iteration over the PR-3 per-round round-scan baseline.
+
+  PYTHONPATH=src python -m benchmarks.epoch_scan [--scale=smoke|std|paper]
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, lenet_cfg, scale, write_bench_json
+from repro.core.adasplit import AdaSplitHParams, AdaSplitTrainer
+from repro.data.synthetic import mixed_noniid
+
+T = 4                    # iterations per round
+REPS = 3
+
+
+def lite_cfg():
+    return dataclasses.replace(lenet_cfg(), name="lenet-lite",
+                               conv_channels=(4, 8), d_model=32)
+
+
+def _mk(cfg, clients, batch, rounds, **hp_kw):
+    hp = AdaSplitHParams(rounds=rounds, kappa=0.0, eta=0.6,
+                         batch_size=batch, seed=0, **hp_kw)
+    return AdaSplitTrainer(cfg, hp, clients)
+
+
+def _round_data(clients, batch, t_iters):
+    iters = [[(c.x[t * batch:(t + 1) * batch],
+               c.y[t * batch:(t + 1) * batch]) for t in range(t_iters)]
+             for c in clients]
+    xs = np.stack([np.stack([iters[i][t][0] for i in range(len(clients))])
+                   for t in range(t_iters)])
+    ys = np.stack([np.stack([iters[i][t][1] for i in range(len(clients))])
+                   for t in range(t_iters)])
+    return xs, ys
+
+
+def _per_round_iter_ms(cfg, clients, batch, R, rd, t_iters):
+    """PR-3 baseline: one dispatch + one sync + host new_round/billing
+    per round (the ``round_scan=True`` driver's inner loop)."""
+    tr = _mk(cfg, clients, batch, R)
+
+    def epoch():
+        for _ in range(R):
+            tr.orch.new_round()
+            tr._dispatch_round(rd[0], rd[1], t_iters, True)
+    epoch()                              # warmup: compile
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.time()
+        epoch()
+        best = min(best, time.time() - t0)
+    return best / (R * t_iters) * 1e3
+
+
+def _epoch_iter_ms(cfg, clients, batch, R, rd, t_iters, chunk):
+    tr = _mk(cfg, clients, batch, R, epoch_scan=True,
+             epoch_chunk_rounds=chunk)
+    rounds_data = [rd] * R
+    tr._run_epoch_scan(rounds_data, t_iters, True)   # warmup: compile
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.time()
+        tr._run_epoch_scan(rounds_data, t_iters, True)
+        best = min(best, time.time() - t0)
+    return best / (R * t_iters) * 1e3
+
+
+def _section(cfg, batch, sizes, R, chunks, t_iters=T, accept_at=None):
+    rows = []
+    for n in sizes:
+        clients = mixed_noniid(n_clients=n, n_per_client=batch * t_iters,
+                               n_test=8, seed=0)
+        rd = _round_data(clients, batch, t_iters)
+        pr_ms = _per_round_iter_ms(cfg, clients, batch, R, rd, t_iters)
+        row = [n, R, f"{pr_ms:.2f}"]
+        best_speed, best_chunk = 0.0, None
+        for ch in chunks:
+            ms = _epoch_iter_ms(cfg, clients, batch, R, rd, t_iters, ch)
+            speed = pr_ms / max(ms, 1e-9)
+            row += [f"{ms:.2f}", f"{speed:.2f}"]
+            if speed > best_speed:
+                best_speed, best_chunk = speed, (ch or R)
+            print(f"[{cfg.name} N={n} B={batch} T={t_iters}] "
+                  f"rounds/dispatch={ch or R}: {ms:.2f} ms/it vs "
+                  f"per-round {pr_ms:.2f} -> {speed:.2f}x")
+        rows.append(row)
+        if accept_at is not None and n == accept_at:
+            verdict = "PASS" if best_speed >= 1.15 else "MISS"
+            print(f"acceptance (paper config N={n}: epoch scan >= 1.15x "
+                  f"per-iteration vs the PR-3 per-round dispatch): "
+                  f"{verdict} ({best_speed:.2f}x at rounds/dispatch="
+                  f"{best_chunk})")
+    hdr = ["n_clients", "rounds", "per_round_ms"]
+    for ch in chunks:
+        hdr += [f"chunk{ch or R}_ms", f"chunk{ch or R}_speedup"]
+    emit(f"epoch_scan {cfg.name} B={batch} T={t_iters} "
+         "(ms/iteration vs rounds-per-dispatch; one device_get/epoch)",
+         rows, hdr)
+
+
+def main():
+    if scale().smoke:
+        _section(lite_cfg(), 2, [8], R=4, chunks=(1, 2, 0), t_iters=2)
+        return
+    _section(lenet_cfg(), 4, [16, 32], R=16, chunks=(1, 2, 8, 0),
+             accept_at=32)
+
+
+if __name__ == "__main__":
+    main()
+    write_bench_json("epoch_scan")

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, scale
+from benchmarks.common import emit, scale, write_bench_json
 from repro.core.losses import ntxent_supervised
 from repro.kernels import ref
 from repro.models.attention import mha_chunked
@@ -162,3 +162,4 @@ def main():
 
 if __name__ == "__main__":
     main()
+    write_bench_json("kernel_bench")

@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, lenet_cfg, scale
+from benchmarks.common import emit, lenet_cfg, scale, write_bench_json
 from repro.core.adasplit import AdaSplitHParams, AdaSplitTrainer
 from repro.data.synthetic import mixed_noniid
 
@@ -287,3 +287,4 @@ def main():
 
 if __name__ == "__main__":
     main()
+    write_bench_json("round_scan")

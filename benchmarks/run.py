@@ -3,13 +3,20 @@
   PYTHONPATH=src python -m benchmarks.run [--scale=smoke|std|paper]
                                           [--only=table1,table4,...]
 
-Sections: round_scan (device-resident rounds vs eager driver),
-global_phase (batched vs sequential global phase), table1
-table2 (comparisons), table3..table6 (sensitivity), fig1 (trade-off
-curve), kernels (microbench), roofline (if dry-run artifacts exist).
+Sections: epoch_scan (epoch-resident rounds vs per-round dispatch),
+round_scan (device-resident rounds vs eager driver), global_phase
+(batched vs sequential global phase), table1 table2 (comparisons),
+table3..table6 (sensitivity), fig1 (trade-off curve), kernels
+(microbench), roofline (if dry-run artifacts exist).
+
+Each section's tables are flushed to a machine-readable
+``BENCH_<section>.json`` (benchmarks.common.write_bench_json), and the
+run ends by aggregating everything it wrote into ``BENCH_all.json`` —
+the cross-PR perf trajectory record.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -22,10 +29,12 @@ def main() -> None:
             only = set(a.split("=", 1)[1].split(","))
     t0 = time.time()
 
-    from benchmarks import ablation_masks, comparison, fig1_tradeoff, \
-        global_phase, kernel_bench, round_scan, sensitivity
+    from benchmarks import ablation_masks, comparison, epoch_scan, \
+        fig1_tradeoff, global_phase, kernel_bench, round_scan, sensitivity
+    from benchmarks.common import write_bench_json
 
     sections = [
+        ("epoch_scan", epoch_scan.main),
         ("round_scan", round_scan.main),
         ("global_phase", global_phase.main),
         ("table1", comparison.table1),
@@ -38,6 +47,7 @@ def main() -> None:
         ("ablation_masks", ablation_masks.main),
         ("kernels", kernel_bench.main),
     ]
+    written = []
     for name, fn in sections:
         if only and name not in only:
             continue
@@ -46,6 +56,9 @@ def main() -> None:
             fn()
         except Exception as e:  # keep the suite going, report at end
             print(f"### {name} FAILED: {e!r}\n")
+        path = write_bench_json(name)
+        if path:
+            written.append(path)
         print(f"[{name} done in {time.time()-t:.0f}s]\n")
 
     # roofline summary from dry-run artifacts, if present
@@ -60,6 +73,16 @@ def main() -> None:
                 print()
         except Exception as e:
             print(f"### roofline skipped: {e!r}\n")
+
+    if written:  # aggregate the per-section records
+        agg = {"sections": []}
+        for p in written:
+            with open(p) as f:
+                agg["sections"].append(json.load(f))
+        with open("BENCH_all.json", "w") as f:
+            json.dump(agg, f, indent=1)
+        print(f"[bench json aggregate -> BENCH_all.json "
+              f"({len(written)} sections)]")
 
     print(f"benchmarks completed in {time.time()-t0:.0f}s")
 

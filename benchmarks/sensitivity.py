@@ -9,7 +9,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import dataset, emit, lenet_cfg, scale
+from benchmarks.common import (dataset, emit, lenet_cfg, scale,
+                               write_bench_json)
 from repro.core.adasplit import AdaSplitHParams, AdaSplitTrainer
 
 
@@ -83,3 +84,4 @@ if __name__ == "__main__":
     table4()
     table5()
     table6()
+    write_bench_json("sensitivity")

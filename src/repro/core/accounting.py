@@ -49,6 +49,29 @@ def split_payload_bytes(acts_shape, batch, *,
     return up + down
 
 
+def batch_payload_bytes(acts_shape, batch, *, count: Optional[int] = None,
+                        nnz_fracs=None, grad_down: bool = False,
+                        dtype_bytes: int = 4) -> int:
+    """Total split-payload bytes over a whole batch of selection events,
+    numpy-vectorized.
+
+    Exactly ``sum(split_payload_bytes(..., nnz_fraction=f) for f in
+    nnz_fracs.flat)`` (or ``count`` dense events when ``nnz_fracs`` is
+    None) — same integer byte totals, no Python loop.  Per-event nnz is
+    ``int(n * f)`` with truncation toward zero, matching the scalar
+    helper bit-for-bit; every partial sum is an exact integer, so the
+    vectorized reduction is order-independent.
+    """
+    n = int(np.prod(acts_shape))
+    per_dense = batch * 4 + (n * dtype_bytes if grad_down else 0)
+    if nnz_fracs is None:
+        assert count is not None
+        return count * (n * dtype_bytes + per_dense)
+    fr = np.asarray(nnz_fracs, np.float64).ravel()
+    nnz = (n * fr).astype(np.int64)          # trunc == int(n * f), f >= 0
+    return int(np.sum(nnz) * (dtype_bytes + 4) + fr.size * per_dense)
+
+
 # ---------------------------------------------------------------------------
 # FLOP models
 # ---------------------------------------------------------------------------
@@ -147,10 +170,11 @@ class Meter:
 
         The round scan (core/adasplit.py) accumulates per-iteration
         payload nnz fractions and selection counts on-device; this
-        ingests the stacked results with the SAME per-event accumulation
-        order as the eager per-iteration path (client FLOPs, then per
-        selected client payload + server FLOPs), so totals match the
-        reference bit-for-bit.
+        ingests the stacked results via the numpy-vectorized
+        ``batch_payload_bytes`` helper — no Python (T, k) loop — with
+        totals equal bit-for-bit to the eager per-event accumulation
+        (every addend is an exact integer-valued float, so the sum is
+        order-independent).
 
         nnz_fracs: optional (n_iters, k) per-selected-client activation
         nnz fractions (activation sparsification on); ``n_selected`` (k)
@@ -158,20 +182,43 @@ class Meter:
         """
         if nnz_fracs is not None:
             nnz_fracs = np.asarray(nnz_fracs)
-            n_selected = nnz_fracs.shape[1]
+            n_selected = nnz_fracs.shape[-1]
         assert n_selected is not None
         fwd_bwd = 3  # fwd + 2x bwd
-        for t in range(n_iters):
-            self.add_client_flops(fwd_bwd * client_flops_per_example
-                                  * n_clients * batch)
-            for j in range(n_selected):
-                f = float(nnz_fracs[t, j]) if nnz_fracs is not None \
-                    else None
-                self.add_payload(split_payload_bytes(
-                    acts_shape, batch, nnz_fraction=f,
-                    grad_down=grad_down, dtype_bytes=dtype_bytes))
-                self.add_server_flops(fwd_bwd * server_flops_per_example
-                                      * batch)
+        self.add_client_flops(fwd_bwd * client_flops_per_example
+                              * n_clients * batch * n_iters)
+        self.add_payload(batch_payload_bytes(
+            acts_shape, batch, count=n_iters * n_selected,
+            nnz_fracs=nnz_fracs, grad_down=grad_down,
+            dtype_bytes=dtype_bytes))
+        self.add_server_flops(fwd_bwd * server_flops_per_example
+                              * batch * n_iters * n_selected)
+
+    def ingest_epoch(self, *, n_rounds, acts_shape, batch, n_clients,
+                     n_iters, client_flops_per_example,
+                     server_flops_per_example, nnz_fracs=None,
+                     n_selected=None, grad_down=False, dtype_bytes=4):
+        """Bill a whole epoch (R on-device rounds, ONE device fetch).
+
+        Literally ``n_rounds`` sequential :meth:`ingest_round` calls —
+        bit-identical totals by construction — returning the list of
+        per-round cumulative summaries so the epoch driver can emit the
+        same per-round history records as the per-round-dispatch path.
+
+        nnz_fracs: optional (n_rounds, n_iters, k) stacked fractions.
+        """
+        summaries = []
+        for r in range(n_rounds):
+            fr = nnz_fracs[r] if nnz_fracs is not None else None
+            self.ingest_round(
+                acts_shape=acts_shape, batch=batch, n_clients=n_clients,
+                n_iters=n_iters,
+                client_flops_per_example=client_flops_per_example,
+                server_flops_per_example=server_flops_per_example,
+                nnz_fracs=fr, n_selected=n_selected,
+                grad_down=grad_down, dtype_bytes=dtype_bytes)
+            summaries.append(self.summary())
+        return summaries
 
     def summary(self) -> dict:
         return {

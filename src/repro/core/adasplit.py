@@ -13,25 +13,51 @@ Faithful elements:
     structured per-unit masks (scale adaptation, DESIGN.md §3);
   * bandwidth / compute metering per eq. 1-2, C3-Score at the end.
 
-Device-resident rounds (round scan)
------------------------------------
-With ``round_scan=True`` (the default) a whole round lives on-device:
-one jitted ``lax.scan`` runs all T iterations, and each scan step is
-the fused ``_round_iteration``
+Three-level dispatch hierarchy (iteration -> round -> epoch)
+------------------------------------------------------------
+The trainer is a ladder of reference implementations, each level
+fusing one more layer of the protocol's control plane into the
+compiled graph.  Every rung reproduces the rung below it —
+selections and meter totals bit-for-bit — so any level can serve as
+the differential oracle for the one above:
 
-    client-step -> UCB select -> global-step -> UCB update
+1. **Iteration-resident** (``round_scan=False``, the eager reference):
+   one dispatch per protocol step — client step, host-side UCB
+   ``select``, batched global step, host ``update`` — with a host sync
+   per global iteration.
+2. **Round-resident** (``round_scan=True``): a whole round under one
+   jitted ``lax.scan`` whose step is the fused ``_round_iteration``
 
-with NO host round-trip in between.  Selection is the pure functional
-orchestrator (``core.orchestrator.ucb_*``): the (N,)-state UCB pytree
-rides in the scan carry next to the stacked client/server/mask/opt
-pytrees (all donated, so XLA updates them in place), and ``top_k`` with
-keyed jitter picks the eta*N clients in-graph.  The round's data is
-staged once as a (T, C, B, ...) device array.  Per-iteration CE
-losses, payload nnz fractions and selection indices come back as
-stacked (T, k) device accumulators and are billed after ONE
-``device_get`` per round (``Meter.ingest_round``); the host
-orchestrator absorbs the same arrays so eager and scanned rounds stay
-bit-interchangeable.
+       client-step -> UCB select -> global-step -> UCB update
+
+   with NO host round-trip in between.  Selection is the pure
+   functional orchestrator (``core.orchestrator.ucb_*``): the
+   (N,)-state UCB pytree rides in the scan carry next to the stacked
+   client/server/mask/opt pytrees (all donated off-CPU, so XLA updates
+   them in place), and ``top_k`` with keyed jitter picks the eta*N
+   clients in-graph.  The round's data is staged once as a
+   (T, C, B, ...) device array; per-iteration CE losses, payload nnz
+   fractions and selection indices come back as stacked (T, k)
+   accumulators billed after ONE ``device_get`` per round
+   (``Meter.ingest_round`` / ``Orchestrator.ingest_round``).
+3. **Epoch-resident** (``epoch_scan=True``): the round boundary itself
+   moves in-graph.  Consecutive same-phase rounds (cut at eval points)
+   run under a rolled OUTER ``lax.scan`` whose body applies
+   ``ucb_new_round`` at the boundary and then runs the inner iteration
+   scan — R x T iterations per dispatch, zero host round-trips, ONE
+   ``device_get`` per epoch (``Meter.ingest_epoch`` /
+   ``Orchestrator.ingest_epoch``, bit-identical to R sequential
+   ``ingest_round`` calls).  Because staging a whole epoch as
+   (R, T, C, B, ...) can blow device memory, ``epoch_chunk_rounds``
+   splits the epoch into round-chunks staged through a two-slot device
+   ring — chunk k+1's async ``device_put`` overlaps the scan over
+   chunk k; chunk=1 degenerates to per-round dispatch, chunk=R is the
+   fully device-resident fast path.  The outer scan stays ROLLED on
+   every backend: XLA compiles the round body once, which keeps the
+   epoch bit-identical to the per-round program (unrolling R copies
+   lets fusion reach across round boundaries and perturbs the last
+   float bit) and is also faster on CPU than an R-fold unrolled
+   program thrashing cache.
 
 Within one iteration the global phase is the PR-1 batched step: the
 selected S = eta*N clients run as one (S*B)-flattened forward with
@@ -63,6 +89,10 @@ backward, replacing the feature-group conv XLA:CPU executes
 group-serially (its transposed backward is ~70x slower than the GEMM
 form at C=32).  ``batched_conv=False`` keeps the
 ``lax.conv_general_dilated`` lowering as the reference path.
+``fused_epilogue=True`` additionally hands each block's bias+ReLU to
+the conv kernel's epilogue — fused into the Pallas GEMM writeback on
+TPU, bit-identical plain XLA ops elsewhere (opt-in until benchmarked
+natively).
 
 The LM/pod-scale variant of the same protocol lives in
 ``repro.launch.train`` (batched cohorts on the device mesh, with the
@@ -84,7 +114,8 @@ from repro.core.accounting import (Meter, lenet_flops_per_example,
 from repro.core.c3 import c3_score
 from repro.core.losses import (accuracy, cross_entropy, l1_penalty,
                                ntxent_supervised)
-from repro.core.orchestrator import Orchestrator, ucb_select, ucb_update
+from repro.core.orchestrator import (Orchestrator, ucb_new_round,
+                                     ucb_select, ucb_update)
 from repro.kernels.client_conv import client_proj
 from repro.models import lenet
 from repro.optim.adam import adam_init, adam_update
@@ -108,10 +139,17 @@ class AdaSplitHParams:
     global_batch: bool = True       # batched global phase (False = seed loop)
     serialize_server_updates: bool = False  # exact-sequential scan in one jit
     round_scan: bool = True         # whole round under one jitted lax.scan
+    epoch_scan: bool = False        # multiple rounds per dispatch (epoch-
+                                    # resident; in-graph ucb_new_round)
+    epoch_chunk_rounds: int = 0     # rounds per staged dispatch chunk
+                                    # (0 = whole epoch device-resident;
+                                    # 1 degenerates to per-round dispatch)
     flat_joint: bool = True         # S*B-flattened joint step (vs vmap ref)
     fused_mask_adam: bool = False   # Pallas fused mask update (TPU only)
     fused_server_adam: bool = False  # Pallas fused server Adam (TPU only)
     batched_conv: bool = True       # im2col batched-GEMM convs (False = ref)
+    fused_epilogue: bool = False    # bias+ReLU in the Pallas GEMM epilogue
+                                    # (TPU; identical XLA ops elsewhere)
     seed: int = 0
 
 
@@ -179,6 +217,9 @@ class AdaSplitTrainer:
     def _compile(self):
         cfg, hp = self.cfg, self.hp
         bc = hp.batched_conv
+        # conv lowering flags for every hot-path forward: the batched
+        # GEMM form + (opt-in) the fused bias+ReLU kernel epilogue
+        fwd_kw = dict(batched_conv=bc, fused_epilogue=hp.fused_epilogue)
         on_tpu = jax.default_backend() == "tpu"
 
         def gated_adam(fused: bool):
@@ -202,7 +243,7 @@ class AdaSplitTrainer:
 
         def client_loss(cp_pp, x, y):
             acts = lenet.client_forward(cfg, cp_pp["c"], x,
-                                        batched_conv=bc)
+                                        **fwd_kw)
             q = _proj_apply(cp_pp["p"], acts)
             loss = ntxent_supervised(q, y, hp.tau)
             if hp.act_l1:
@@ -224,11 +265,11 @@ class AdaSplitTrainer:
             if hp.mask_mode == "per_scalar":
                 eff = masks_mod.apply_scalar_masks(sp, mask_i)
                 logits, _ = lenet.server_forward(cfg, eff, acts,
-                                                 batched_conv=bc)
+                                                 **fwd_kw)
             else:
                 logits, _ = lenet.server_forward(cfg, sp, acts,
                                                  gates=mask_i,
-                                                 batched_conv=bc)
+                                                 **fwd_kw)
             loss = cross_entropy(logits, y)
             return loss + hp.lam * l1_penalty(mask_i), loss
 
@@ -245,17 +286,17 @@ class AdaSplitTrainer:
         def joint_loss(cp_pp, sp, mask_i, x, y):
             """Table-5 ablation: client also receives the server CE grad."""
             acts = lenet.client_forward(cfg, cp_pp["c"], x,
-                                        batched_conv=bc)
+                                        **fwd_kw)
             q = _proj_apply(cp_pp["p"], acts)
             lc = ntxent_supervised(q, y, hp.tau)
             if hp.mask_mode == "per_scalar":
                 eff = masks_mod.apply_scalar_masks(sp, mask_i)
                 logits, _ = lenet.server_forward(cfg, eff, acts,
-                                                 batched_conv=bc)
+                                                 **fwd_kw)
             else:
                 logits, _ = lenet.server_forward(cfg, sp, acts,
                                                  gates=mask_i,
-                                                 batched_conv=bc)
+                                                 **fwd_kw)
             ce = cross_entropy(logits, y)
             return lc + ce + hp.lam * l1_penalty(mask_i), ce
 
@@ -299,7 +340,7 @@ class AdaSplitTrainer:
             global phase scale with hardware batch efficiency."""
             gates = jax.tree.map(lambda l: l[seg_ids], masks_sel)
             logits, _ = lenet.server_forward(cfg, sp, acts_flat,
-                                             gates=gates, batched_conv=bc)
+                                             gates=gates, **fwd_kw)
             ces = seg_ces(logits, y_flat, S)
             total = jnp.sum(ces) + hp.lam * l1_penalty(masks_sel) * S
             return total, ces
@@ -354,7 +395,7 @@ class AdaSplitTrainer:
             identical math to the vmap of ``joint_loss``."""
             def client_part(cp_pp, x):
                 acts = lenet.client_forward(cfg, cp_pp["c"], x,
-                                            batched_conv=bc)
+                                            **fwd_kw)
                 q = _proj_apply(cp_pp["p"], acts)
                 return acts, q
 
@@ -365,7 +406,7 @@ class AdaSplitTrainer:
             acts_flat = acts.reshape((S * B,) + acts.shape[2:])
             gates = jax.tree.map(lambda l: l[seg_ids], masks_sel)
             logits, _ = lenet.server_forward(cfg, sp, acts_flat,
-                                             gates=gates, batched_conv=bc)
+                                             gates=gates, **fwd_kw)
             ces = seg_ces(logits, ys_sel.reshape(-1), S)
             total = jnp.sum(lcs) + jnp.sum(ces) \
                 + hp.lam * l1_penalty(masks_sel) * S
@@ -419,14 +460,14 @@ class AdaSplitTrainer:
         self._global_joint_step = jax.jit(global_joint_step)
 
         def eval_client(cp, sp, mask_i, x, y):
-            acts = lenet.client_forward(cfg, cp, x, batched_conv=bc)
+            acts = lenet.client_forward(cfg, cp, x, **fwd_kw)
             if hp.mask_mode == "per_scalar":
                 eff = masks_mod.apply_scalar_masks(sp, mask_i)
                 logits, _ = lenet.server_forward(cfg, eff, acts,
-                                                 batched_conv=bc)
+                                                 **fwd_kw)
             else:
                 logits, _ = lenet.server_forward(cfg, sp, acts, gates=mask_i,
-                                                 batched_conv=bc)
+                                                 **fwd_kw)
             return accuracy(logits, y)
 
         self._eval_client = jax.jit(eval_client)
@@ -437,20 +478,16 @@ class AdaSplitTrainer:
     # ------------------------------------------------------------------
     # device-resident round: fused iteration + lax.scan over T
     # ------------------------------------------------------------------
-    def _round_fn(self, T: int, global_phase: bool):
-        """One jitted fn running a whole round: scan of the fused
-        client-step -> select -> global-step -> UCB-update iteration.
-        Cached per (T, global_phase); carries are donated off-CPU so
-        XLA updates the stacked param/opt/mask pytrees in place."""
-        cache_key = (T, global_phase)
-        if cache_key in self._round_fns:
-            return self._round_fns[cache_key]
+    def _iteration_fn(self, global_phase: bool):
+        """The fused per-iteration body shared by the round and epoch
+        scans: client-step -> in-graph UCB select -> global-step ->
+        UCB update, carry = (params, opts, masks, bandit state)."""
         hp = self.hp
         n, k, gamma = self.n, self.orch.k, self.hp.gamma
         client_step = self._client_step_fn
         global_step = self._global_step_fn
         global_joint = self._global_joint_fn
-        select_key = self.orch.select_key   # one key schedule, both paths
+        select_key = self.orch.select_key   # one key schedule, all paths
 
         def _round_iteration(carry, xs):
             cp_pp, c_opt, sp, s_opt, masks, m_opt, ucb = carry
@@ -484,6 +521,18 @@ class AdaSplitTrainer:
             carry = (cp_pp, c_opt, sp, s_opt, masks, m_opt, ucb)
             return carry, (idx, ces, fracs)
 
+        return _round_iteration
+
+    def _round_fn(self, T: int, global_phase: bool):
+        """One jitted fn running a whole round: scan of the fused
+        client-step -> select -> global-step -> UCB-update iteration.
+        Cached per (T, global_phase); carries are donated off-CPU so
+        XLA updates the stacked param/opt/mask pytrees in place."""
+        cache_key = (T, global_phase)
+        if cache_key in self._round_fns:
+            return self._round_fns[cache_key]
+        _round_iteration = self._iteration_fn(global_phase)
+
         # XLA:CPU serializes ops inside a while-loop body onto one
         # thread; fully unrolling short rounds (trip count 1) restores
         # intra-op parallelism at ~2x wall-clock.  Accelerator backends
@@ -501,30 +550,98 @@ class AdaSplitTrainer:
         self._round_fns[cache_key] = fn
         return fn
 
+    def _epoch_fn(self, R: int, T: int, global_phase: bool):
+        """One jitted fn running R whole rounds: an outer scan whose
+        body applies ``ucb_new_round`` IN-GRAPH at the round boundary
+        and then runs the round's inner iteration scan — R x T fused
+        iterations per dispatch, zero host round-trips.  Cached per
+        (R, T, global_phase); carries donated off-CPU."""
+        cache_key = ("epoch", R, T, global_phase)
+        if cache_key in self._round_fns:
+            return self._round_fns[cache_key]
+        _round_iteration = self._iteration_fn(global_phase)
+        gamma = self.hp.gamma
+
+        # Inner scan: same CPU unroll trade-off as _round_fn.  The
+        # OUTER scan stays rolled on every backend: XLA compiles the
+        # while body once — measured bit-identical to the per-round
+        # program AND faster than unrolling R copies (whose fusion
+        # across round boundaries both perturbs the last float bit and
+        # thrashes the CPU cache with R x T live intermediates).
+        on_cpu = jax.default_backend() == "cpu"
+        inner_unroll = T if (on_cpu and 1 <= T <= 8) else 1
+
+        def round_body(carry, xs):
+            xs_round, ys_round, t_idx = xs
+            cp_pp, c_opt, sp, s_opt, masks, m_opt, ucb = carry
+            ucb = ucb_new_round(ucb, gamma=gamma)   # round boundary
+            # barrier: stops XLA fusing the boundary reset into the
+            # first iteration's ucb_update FMA chain, which would
+            # perturb l_disc by 1 ULP vs the host-eager new_round the
+            # per-round driver performs (bit-interchangeability is the
+            # contract the whole reference ladder rests on)
+            ucb = jax.lax.optimization_barrier(ucb)
+            carry = (cp_pp, c_opt, sp, s_opt, masks, m_opt, ucb)
+            return jax.lax.scan(_round_iteration, carry,
+                                (xs_round, ys_round, t_idx),
+                                unroll=inner_unroll)
+
+        def epoch_fn(carry, xs_ep, ys_ep, t_ep):
+            return jax.lax.scan(round_body, carry, (xs_ep, ys_ep, t_ep))
+
+        # Donate the carry on EVERY backend (unlike the per-round fn,
+        # which keeps the PR-2 CPU behavior as the baseline): the epoch
+        # carry only ever flows forward — into the next chunk's
+        # dispatch or back into the trainer state — and donation lets
+        # XLA alias the big stacked param/opt pytrees in place
+        # (measured ~8% per-iteration on the 2-core CPU box alone).
+        fn = jax.jit(epoch_fn, donate_argnums=(0,))
+        self._round_fns[cache_key] = fn
+        return fn
+
+    @staticmethod
+    def _stage_round_np(iters, T: int, n: int):
+        """Host-side staging: one round's batches as (T, C, B, ...)."""
+        xs_round = np.stack(
+            [np.stack([iters[i][t][0] for i in range(n)])
+             for t in range(T)])
+        ys_round = np.stack(
+            [np.stack([iters[i][t][1] for i in range(n)])
+             for t in range(T)])
+        return xs_round, ys_round
+
+    def _carry(self):
+        return ({"c": self.client_params, "p": self.proj_params},
+                self.c_opt, self.server_params, self.s_opt, self.masks,
+                self.m_opt, self.orch.state)
+
+    def _set_carry(self, carry):
+        (cp_pp, self.c_opt, self.server_params, self.s_opt, self.masks,
+         self.m_opt, ucb) = carry
+        self.client_params, self.proj_params = cp_pp["c"], cp_pp["p"]
+        return ucb
+
     def _run_round_scan(self, iters, T: int, global_phase: bool):
         """Stage the round's data as (T, C, B, ...) once, run the scan,
         then bill meters + orchestrator from ONE device fetch."""
-        hp = self.hp
         if T == 0:
             return
-        xs_round = np.stack(
-            [np.stack([iters[i][t][0] for i in range(self.n)])
-             for t in range(T)])
-        ys_round = np.stack(
-            [np.stack([iters[i][t][1] for i in range(self.n)])
-             for t in range(T)])
+        xs_round, ys_round = self._stage_round_np(iters, T, self.n)
+        self._dispatch_round(xs_round, ys_round, T, global_phase)
+
+    def _dispatch_round(self, xs_round, ys_round, T: int,
+                        global_phase: bool):
+        """One round-scan dispatch from pre-staged (T, C, B, ...) host
+        arrays (the PR-2 per-round path; epoch_scan replaces the
+        per-round sync with one fetch per epoch)."""
+        hp = self.hp
         t_idx = jnp.arange(self.orch._n_selects,
                            self.orch._n_selects + T, dtype=jnp.int32)
 
         fn = self._round_fn(T, global_phase)
-        carry = ({"c": self.client_params, "p": self.proj_params},
-                 self.c_opt, self.server_params, self.s_opt, self.masks,
-                 self.m_opt, self.orch.state)
-        carry, outs = fn(carry, jnp.asarray(xs_round),
+        carry, outs = fn(self._carry(), jnp.asarray(xs_round),
                          jnp.asarray(ys_round), t_idx)
-        (cp_pp, self.c_opt, self.server_params, self.s_opt, self.masks,
-         self.m_opt, ucb) = carry
-        self.client_params, self.proj_params = cp_pp["c"], cp_pp["p"]
+        ucb = self._set_carry(carry)
 
         acts_shape = (hp.batch_size,) + self._acts_spatial
         if global_phase:
@@ -545,6 +662,80 @@ class AdaSplitTrainer:
                 client_flops_per_example=self._fl_c,
                 server_flops_per_example=self._fl_s, n_selected=0)
             self.orch.state = ucb
+
+    # ------------------------------------------------------------------
+    # epoch-resident training: R rounds per dispatch, chunked staging
+    # ------------------------------------------------------------------
+    def _run_epoch_scan(self, rounds_data, T: int, global_phase: bool):
+        """Run a whole epoch of R rounds device-resident.
+
+        rounds_data: per-round ``(xs, ys)`` numpy arrays, each
+        (T, C, B, ...) — or zero-arg callables producing them, invoked
+        LAZILY in round order as each chunk is staged, so host memory
+        holds at most two chunks of batches regardless of R (the
+        ``epoch_chunk_rounds`` knob bounds host staging and device
+        residency alike).  Rounds are dispatched in chunks of
+        ``epoch_chunk_rounds`` (0 = all R in ONE dispatch) through a
+        two-slot staging ring: chunk k+1's ``device_put`` is issued
+        right after chunk k's (async) scan dispatch, so the host->device
+        copy overlaps chunk k's compute.  The carry flows across chunks
+        as device references — selections / CE losses / nnz fractions
+        from every chunk come back in exactly ONE ``device_get`` at the
+        epoch's end, absorbed by ``Meter.ingest_epoch`` and
+        ``Orchestrator.ingest_epoch``.  Returns the per-round cumulative
+        meter summaries.
+        """
+        hp = self.hp
+        R = len(rounds_data)
+        if R == 0 or T == 0:
+            return []
+        chunk = hp.epoch_chunk_rounds or R
+        chunk = max(1, min(chunk, R))
+        base = self.orch._n_selects
+
+        def stage(r0, rc):
+            rds = [rounds_data[r]() if callable(rounds_data[r])
+                   else rounds_data[r] for r in range(r0, r0 + rc)]
+            xs = np.stack([rd[0] for rd in rds])
+            ys = np.stack([rd[1] for rd in rds])
+            t_idx = (base + (r0 + np.arange(rc))[:, None] * T
+                     + np.arange(T)[None, :]).astype(np.int32)
+            return (jax.device_put(xs), jax.device_put(ys),
+                    jax.device_put(t_idx))
+
+        starts = list(range(0, R, chunk))
+        ring = [stage(0, min(chunk, R))]            # slot 0: first chunk
+        carry, outs_all = self._carry(), []
+        for ci, r0 in enumerate(starts):
+            rc = min(chunk, R - r0)
+            fn = self._epoch_fn(rc, T, global_phase)
+            carry, outs = fn(carry, *ring.pop(0))   # async dispatch
+            if ci + 1 < len(starts):                # slot 1: next chunk's
+                n0 = starts[ci + 1]                 # H2D overlaps compute
+                ring.append(stage(n0, min(chunk, R - n0)))
+            outs_all.append(outs)
+        ucb = self._set_carry(carry)
+
+        acts_shape = (hp.batch_size,) + self._acts_spatial
+        bill = dict(acts_shape=acts_shape, batch=hp.batch_size,
+                    n_clients=self.n, n_iters=T,
+                    client_flops_per_example=self._fl_c,
+                    server_flops_per_example=self._fl_s)
+        if global_phase:
+            fetched = jax.device_get(outs_all)      # the ONE epoch sync
+            idx_all = np.concatenate([f[0] for f in fetched])
+            ces_all = np.concatenate([f[1] for f in fetched])
+            fracs_all = np.concatenate([f[2] for f in fetched])
+            summaries = self.meter.ingest_epoch(
+                n_rounds=R, nnz_fracs=fracs_all if hp.act_l1 else None,
+                n_selected=idx_all.shape[-1],
+                grad_down=hp.server_grad_to_client, **bill)
+            self.orch.ingest_epoch(idx_all, ces_all, state=ucb)
+        else:
+            summaries = self.meter.ingest_epoch(n_rounds=R, n_selected=0,
+                                                **bill)
+            self.orch.ingest_epoch(None, None, state=ucb, n_rounds=R)
+        return summaries
 
     # ------------------------------------------------------------------
     def _client_slice(self, tree, i):
@@ -658,6 +849,8 @@ class AdaSplitTrainer:
         local_rounds = int(round(hp.kappa * hp.rounds))
         fl_c = self._fl_c
         use_scan = hp.round_scan and hp.global_batch
+        if hp.epoch_scan and use_scan:
+            return self._train_epoch_scan(eval_every)
         global_iter = (self._global_iteration if hp.global_batch
                        else self._global_iteration_loop)
 
@@ -691,6 +884,59 @@ class AdaSplitTrainer:
             if (r + 1) % eval_every == 0 or r == hp.rounds - 1:
                 rec["accuracy"] = self.evaluate()
             self.history.append(rec)
+        return self.history
+
+    def _train_epoch_scan(self, eval_every: int):
+        """Epoch-resident driver: consecutive rounds sharing a phase are
+        grouped into one epoch (cut at eval points, where the host needs
+        the params anyway) and run through ``_run_epoch_scan`` — R x T
+        iterations per dispatch group, ONE ``device_get`` each.  History
+        records per round are reconstructed from the epoch's stacked
+        outputs, bit-identical to the per-round-dispatch driver's."""
+        hp = self.hp
+        local_rounds = int(round(hp.kappa * hp.rounds))
+        # T is a pure function of the data sizes (batch_iterator drops
+        # the remainder), so it is known before any batches are drawn
+        T = min(len(c.x) // hp.batch_size for c in self.clients)
+
+        def is_eval(r):
+            return (r + 1) % eval_every == 0 or r == hp.rounds - 1
+
+        def make_round():
+            """One round's staged data, drawn from the SAME per-client
+            RNG stream (and in the same order) as the eager drivers.
+            Called lazily by the staging ring — at most two chunks of
+            batches are ever materialized on the host."""
+            iters = [list(self._epoch_batches(i)) for i in range(self.n)]
+            assert min(len(it) for it in iters) == T
+            return self._stage_round_np(iters, T, self.n)
+
+        r = 0
+        while r < hp.rounds:
+            global_phase = r >= local_rounds
+            end = r
+            while (end + 1 < hp.rounds and not is_eval(end)
+                   and ((end + 1) >= local_rounds) == global_phase):
+                end += 1
+            R = end - r + 1                 # rounds r..end = one epoch
+            if T == 0:
+                # nothing to run, but the per-round driver still resets
+                # the bandit each round — keep the ladder interchangeable
+                summaries = []
+                for _ in range(R):
+                    self.orch.new_round()
+            else:
+                summaries = self._run_epoch_scan([make_round] * R, T,
+                                                 global_phase)
+            for j, rr in enumerate(range(r, end + 1)):
+                rec = {"round": rr,
+                       "phase": "global" if global_phase else "local",
+                       **(summaries[j] if j < len(summaries)
+                          else self.meter.summary())}
+                if is_eval(rr):        # only possible at the epoch end
+                    rec["accuracy"] = self.evaluate()
+                self.history.append(rec)
+            r = end + 1
         return self.history
 
     # ------------------------------------------------------------------

@@ -198,11 +198,17 @@ class Orchestrator:
     def new_round(self):
         """Reset per-round histories (T is iterations in the round)."""
         self.state = ucb_new_round(self.state, gamma=self.gamma)
+        self._reset_round_history()
+
+    def _reset_round_history(self):
+        """The host-history half of ``new_round``: L=[last, last],
+        S=[1, 1] — kept separate so epoch ingestion can replay in-graph
+        ``ucb_new_round`` boundaries without touching the device state."""
         last = self.L[:, -1]
         self.L = np.column_stack([last, last])
         self.S = np.ones((self.n, 2), np.float64)
 
-    # -- round-scan interop -------------------------------------------
+    # -- round/epoch-scan interop -------------------------------------
     def ingest_round(self, sel_idx, losses, state=None):
         """Absorb a whole round computed on-device.
 
@@ -225,3 +231,26 @@ class Orchestrator:
         if state is not None:
             self.state = state
         self._n_selects += sel_idx.shape[0]
+
+    def ingest_epoch(self, sel_idx, losses, *, state, n_rounds=None):
+        """Absorb a whole EPOCH — R rounds computed in one (possibly
+        chunked) device-resident dispatch, each round opened by an
+        in-graph ``ucb_new_round`` at the scan's round boundary.
+
+        Equivalent to R x (``new_round()``; ``ingest_round(...)``) with
+        the epoch scan's final UCB state adopted once.  sel_idx /
+        losses: (R, T, k), or None for a local-phase epoch (no
+        selections; pass ``n_rounds``) where only the round-boundary
+        history resets and the final state apply.
+        """
+        if sel_idx is None:
+            assert n_rounds is not None
+            for _ in range(n_rounds):
+                self._reset_round_history()
+            self.state = state
+            return
+        sel_idx = np.asarray(sel_idx)
+        losses = np.asarray(losses)
+        for r in range(sel_idx.shape[0]):
+            self._reset_round_history()
+            self.ingest_round(sel_idx[r], losses[r], state=state)

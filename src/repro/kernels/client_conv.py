@@ -164,11 +164,97 @@ panel_gemm.defvjp(_panel_gemm_vjp_fwd, _panel_gemm_vjp_bwd)
 
 
 # ---------------------------------------------------------------------------
+# fused bias+ReLU epilogue (ROADMAP next-step)
+# ---------------------------------------------------------------------------
+
+
+def _gemm_bias_relu_kernel(a_ref, b_ref, bias_ref, o_ref):
+    z = jnp.dot(a_ref[0], b_ref[0], preferred_element_type=jnp.float32)
+    z = z + bias_ref[0].astype(jnp.float32)
+    o_ref[...] = jnp.maximum(z, 0).astype(o_ref.dtype)[None]
+
+
+def panel_gemm_bias_relu_2d(a, b, bias, *, block_m: int = 128,
+                            interpret: bool = True):
+    """relu((C, M, K) @ (C, K, N) + bias (C, N)) with the bias add and
+    ReLU fused into the GEMM epilogue — the accumulator tile is
+    rectified in registers before the HBM writeback, instead of a
+    separate elementwise pass re-reading the (C, M, N) output."""
+    C, M, K = a.shape
+    N = b.shape[-1]
+    bm = min(block_m, M)
+    assert M % bm == 0, (M, bm)
+    grid = (C, M // bm)
+    return pl.pallas_call(
+        _gemm_bias_relu_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bm, K), lambda c, m: (c, m, 0)),
+                  pl.BlockSpec((1, K, N), lambda c, m: (c, 0, 0)),
+                  pl.BlockSpec((1, N), lambda c, m: (c, 0))],
+        out_specs=pl.BlockSpec((1, bm, N), lambda c, m: (c, m, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, M, N), a.dtype),
+        interpret=interpret,
+    )(a, b, bias)
+
+
+def _panel_gemm_fused_fwd(a, b, bias, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    M, N = a.shape[1], b.shape[2]
+    ap = _pad_to(_pad_to(a, 2, 128), 1, 128)
+    bp = _pad_to(_pad_to(b, 1, 128), 2, 128)
+    biasp = _pad_to(bias, 1, 128)
+    out = panel_gemm_bias_relu_2d(ap, bp, biasp, interpret=interpret)
+    return out[:, :M, :N]
+
+
+@jax.custom_vjp
+def panel_gemm_fused(a, b, bias):
+    """``relu(panel_gemm(a, b) + bias[:, None, :])`` through the fused
+    Pallas epilogue kernel; backward unchanged — routed through the
+    same einsum-form batched GEMMs as :func:`panel_gemm`, with the ReLU
+    mask recovered from the saved output (``out > 0`` ⟺ pre-activation
+    > 0, the identical subgradient-at-0 convention as ``jax.nn.relu``).
+    """
+    return _panel_gemm_fused_fwd(a, b, bias)
+
+
+def _panel_gemm_fused_vjp_fwd(a, b, bias):
+    out = _panel_gemm_fused_fwd(a, b, bias)
+    return out, (a, b, bias, out)
+
+
+def _panel_gemm_fused_vjp_bwd(res, g):
+    a, b, bias, out = res
+    dz = jnp.where(out > 0, g, 0)
+    da = jnp.einsum("cmn,ckn->cmk", dz, b).astype(a.dtype)
+    db = jnp.einsum("cmk,cmn->ckn", a, dz).astype(b.dtype)
+    dbias = jnp.sum(dz, axis=1).astype(bias.dtype)
+    return da, db, dbias
+
+
+panel_gemm_fused.defvjp(_panel_gemm_fused_vjp_fwd,
+                        _panel_gemm_fused_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
 # public conv entry point
 # ---------------------------------------------------------------------------
 
 
-def client_conv(x, w, *, method: str | None = None):
+def broadcast_bias(bias):
+    """A conv bias shaped for NHWC broadcast: stacked (C, Cout) ->
+    (C, 1, 1, 1, Cout); unstacked (Cout,) unchanged.  The ONE
+    definition of the epilogue's broadcast — shared by the fused and
+    unfused paths (and lenet._conv_block) so they stay bit-identical.
+    """
+    if bias.ndim > 1:
+        return bias.reshape(bias.shape[:-1] + (1, 1, 1) + bias.shape[-1:])
+    return bias
+
+
+def client_conv(x, w, *, method: str | None = None, bias=None,
+                fused_epilogue: bool = False):
     """Stacked-client KxK "same" conv, client axis optional.
 
     x: (C, B, H, W, Cin) with w (C, K, K, Cin, Cout), or unstacked
@@ -176,16 +262,41 @@ def client_conv(x, w, *, method: str | None = None):
     (autodiff primal, batched GEMM on every backend), "pallas"
     (TPU-native kernel, custom VJP), "conv" (vmapped grouped-conv
     reference), or None = backend default.
+
+    ``fused_epilogue=True`` (requires ``bias``: (C, Cout) stacked or
+    (Cout,)) returns ``relu(conv + bias)`` with the epilogue fused into
+    the Pallas GEMM's writeback on the "pallas" path; the "einsum" /
+    "conv" paths apply the identical ``relu(. + bias)`` epilogue as
+    plain XLA ops (same float ops in the same order as the unfused
+    caller-side bias+ReLU, so CPU training paths are bit-unchanged).
     """
     if method is None:
         method = default_method()
+    assert (bias is not None) == fused_epilogue, (fused_epilogue, bias)
     if method == "conv":
-        return _conv_reference(x, w)
+        y = _conv_reference(x, w)
+        if fused_epilogue:
+            y = jax.nn.relu(y + broadcast_bias(bias).astype(y.dtype))
+        return y
     patches, panels, out_shape = _panels(x, w)
     if method == "einsum":
-        return jnp.matmul(patches, panels).reshape(out_shape)
+        y = jnp.matmul(patches, panels).reshape(out_shape)
+        if fused_epilogue:
+            # identical op order to the caller-side epilogue (reshape,
+            # add, relu) so training graphs are BIT-unchanged on the
+            # einsum path; XLA fuses the elementwise tail into the GEMM
+            # consumer either way
+            y = jax.nn.relu(y + broadcast_bias(bias).astype(y.dtype))
+        return y
     assert method == "pallas", method
-    if w.ndim == 4:                      # unstacked: batch of one panel
+    if fused_epilogue:
+        bias = bias.astype(x.dtype)
+        if w.ndim == 4:                  # unstacked: batch of one panel
+            out = panel_gemm_fused(patches[None], panels[None],
+                                   bias[None])[0]
+        else:
+            out = panel_gemm_fused(patches, panels, bias)
+    elif w.ndim == 4:
         out = panel_gemm(patches[None], panels[None])[0]
     else:
         out = panel_gemm(patches, panels)

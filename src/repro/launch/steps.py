@@ -494,6 +494,52 @@ def build_ucb_train_step(cfg: ModelConfig, mesh, shape: InputShape,
     return ucb_step, k, state_sds, batch_sds
 
 
+def build_windowed_ucb_step(cfg: ModelConfig, mesh, shape: InputShape,
+                            policy: Optional[LaunchPolicy] = None, *,
+                            eta: float = 0.6, gamma: float = 0.87):
+    """``build_ucb_train_step`` scanned over a whole metrics window —
+    the LM mirror of the epoch-resident round scan (core/adasplit.py).
+
+    The per-step driver already deferred METRIC syncs to one
+    ``device_get`` per ``log_every`` window, but still paid one dispatch
+    (and its host-side control plane) per step.  ``window_step`` runs W
+    steps under one ``lax.scan`` per dispatch:
+
+      window_step(state, ucb, batches, keys, is_global)
+          -> (state, ucb, metrics)
+
+    with ``batches`` stacked (W, ...) leaves, ``keys`` (W, 2) fold-in
+    keys (the SAME persistent schedule as the per-step driver, so cohort
+    selections match bitwise), ``is_global`` a (W,) traced 0/1 vector
+    (windows may straddle the two-phase switch), and ``metrics`` stacked
+    (W, ...) leaves fetched by the driver in its one per-window sync.
+    Returns ``(window_step, k, state_sds, batch_sds)`` — the SDS trees
+    describe ONE step's inputs; prepend the window dim for lowering.
+    """
+    ucb_step, k, state_sds, batch_sds = build_ucb_train_step(
+        cfg, mesh, shape, policy, eta=eta, gamma=gamma)
+    return wrap_window(ucb_step), k, state_sds, batch_sds
+
+
+def wrap_window(ucb_step):
+    """The window scan over an ALREADY-built ``ucb_step`` (see
+    :func:`build_windowed_ucb_step`) — lets a driver that built the
+    per-step fn reuse it without a second ``build_ucb_train_step``."""
+
+    def window_step(state, ucb, batches, keys, is_global):
+        def body(carry, xs):
+            state, ucb = carry
+            batch, key, g = xs
+            state, ucb, metrics = ucb_step(state, ucb, batch, key, g)
+            return (state, ucb), metrics
+
+        (state, ucb), metrics = jax.lax.scan(
+            body, (state, ucb), (batches, keys, is_global))
+        return state, ucb, metrics
+
+    return window_step
+
+
 # ---------------------------------------------------------------------------
 # Serve steps (prefill / decode) — masks pre-folded (DESIGN.md §4)
 # ---------------------------------------------------------------------------

@@ -32,7 +32,8 @@ from repro.core.orchestrator import ucb_init
 from repro.data.tokens import lm_batch_iterator, lm_client_dataset
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import (LaunchPolicy, build_ucb_train_step,
-                                init_train_state, train_state_specs)
+                                init_train_state, train_state_specs,
+                                wrap_window)
 
 
 def make_batch(cfg, raw, C):
@@ -69,10 +70,12 @@ class LMAdaSplitTrainer:
     """
 
     def __init__(self, cfg, mesh, shape: InputShape, policy: LaunchPolicy,
-                 *, kappa=0.6, eta=0.6, gamma=0.87, seed=0):
+                 *, kappa=0.6, eta=0.6, gamma=0.87, seed=0,
+                 epoch_scan=False):
         self.cfg, self.mesh, self.shape, self.policy = cfg, mesh, shape, \
             policy
         self.kappa, self.eta, self.gamma = kappa, eta, gamma
+        self.epoch_scan = epoch_scan
         with mesh:
             step_fn, self.k, self._state_sds, _ = build_ucb_train_step(
                 cfg, mesh, shape, policy, eta=eta, gamma=gamma)
@@ -86,6 +89,11 @@ class LMAdaSplitTrainer:
                 state, specs)
             # ONE compilation for both phases: is_global is traced
             self._jit_step = jax.jit(step_fn)
+            if epoch_scan:
+                # one dispatch per log window (compiled per distinct
+                # window length W via the leading batch dim); wraps the
+                # ALREADY-built step — no second build_ucb_train_step
+                self._jit_window = jax.jit(wrap_window(step_fn))
         self.ucb = ucb_init(self.C, gamma=gamma)
         self._base_key = jax.random.PRNGKey(seed)
         self._step = 0          # persistent: run() never replays keys
@@ -120,6 +128,10 @@ class LMAdaSplitTrainer:
         # bf16 split activations + int32 labels, per selected cohort
         payload = split_payload_bytes((b, shape.seq_len, cfg.d_model), b,
                                       dtype_bytes=2)
+        bill = (fl_c, fl_s, tokens_per_client, payload)
+        if self.epoch_scan:
+            return self._run_windowed(total_steps, local_steps, it,
+                                      log_every, bill)
 
         pending = []
         for t in range(total_steps):
@@ -136,18 +148,68 @@ class LMAdaSplitTrainer:
                     self.state, self.ucb, batch, key,
                     jnp.asarray(global_phase))
 
-            # eq. 1-2 metering (per-protocol, host side; k is static)
-            self.meter.add_client_flops(3 * fl_c * tokens_per_client
-                                        * self.C)
-            if global_phase:
-                for _ in range(self.k):
-                    self.meter.add_payload(payload)
-                self.meter.add_server_flops(
-                    3 * fl_s * tokens_per_client * self.k)
+            self._bill_step(global_phase, bill)
             pending.append((t, "global" if global_phase else "local",
                             self.meter.summary(), metrics))
             if (t + 1) % log_every == 0 or t == total_steps - 1:
                 self._drain(pending)
+        return self.history
+
+    def _bill_step(self, global_phase, bill):
+        """eq. 1-2 metering for one step (host side; k is static)."""
+        fl_c, fl_s, tokens_per_client, payload = bill
+        self.meter.add_client_flops(3 * fl_c * tokens_per_client * self.C)
+        if global_phase:
+            for _ in range(self.k):
+                self.meter.add_payload(payload)
+            self.meter.add_server_flops(
+                3 * fl_s * tokens_per_client * self.k)
+
+    def _run_windowed(self, total_steps, local_steps, it, log_every,
+                      bill):
+        """Epoch-resident LM driver: ONE dispatch (and one metric sync)
+        per ``log_every`` window.  W steps' batches are stacked on the
+        host with their fold-in keys (same persistent schedule as the
+        per-step path, so selections match bitwise) and scanned in-graph
+        via ``build_windowed_ucb_step``."""
+        cfg, shape = self.cfg, self.shape
+        done = 0
+        while done < total_steps:
+            W = min(log_every, total_steps - done)
+            raws = [next(it) for _ in range(W)]
+            batches = {
+                "tokens": jnp.asarray(np.stack([r["tokens"]
+                                                for r in raws])),
+                "labels": jnp.asarray(np.stack([r["targets"]
+                                                for r in raws])),
+                "seq_class": jnp.asarray(np.stack([r["seq_labels"]
+                                                   for r in raws])),
+                "select": jnp.ones((W, self.C), jnp.float32),
+            }
+            extras = [add_extras(cfg, {}, shape.global_batch,
+                                 shape.seq_len, self._rng)
+                      for _ in range(W)]
+            if extras[0]:
+                batches.update(jax.tree.map(
+                    lambda *x: jnp.stack(x), *extras))
+            gflags = np.arange(done, done + W) >= local_steps
+            with self.mesh:
+                keys = jnp.stack(
+                    [jax.random.fold_in(self._base_key, self._step + i)
+                     for i in range(W)])
+                self._step += W
+                self.state, self.ucb, metrics = self._jit_window(
+                    self.state, self.ucb, batches, keys,
+                    jnp.asarray(gflags))
+            m = jax.device_get(metrics)      # ONE sync per window
+            for i in range(W):
+                self._bill_step(bool(gflags[i]), bill)
+                self.history.append(
+                    {"step": done + i,
+                     "phase": "global" if gflags[i] else "local",
+                     "l_client": float(m["l_client"][i]),
+                     "ce": float(m["ce"][i]), **self.meter.summary()})
+            done += W
         return self.history
 
 

@@ -22,7 +22,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.client_conv import client_conv
+from repro.kernels.client_conv import broadcast_bias, client_conv
 
 
 def _conv_init(key, cin, cout, k=5):
@@ -30,25 +30,30 @@ def _conv_init(key, cin, cout, k=5):
     return {"w": w, "b": jnp.zeros((cout,))}
 
 
-def _conv_block(p, x, gate=None, *, batched_conv=False, conv_method=None):
+def _conv_block(p, x, gate=None, *, batched_conv=False, conv_method=None,
+                fused_epilogue=False):
     """One conv+ReLU+maxpool block, client axis optional.
 
     Unstacked: x (B, H, W, Cin), w (K, K, Cin, Cout).  Stacked: x
     (C, B, H, W, Cin) with w (C, K, K, Cin, Cout) — the whole client
     stack in one call (one batched GEMM with ``batched_conv=True``).
+    ``fused_epilogue=True`` hands the bias+ReLU to the conv kernel's
+    epilogue (fused into the Pallas GEMM writeback on TPU; identical
+    XLA ops elsewhere).
     """
     w = p["w"].astype(x.dtype)
-    if batched_conv or w.ndim == 5:
+    if (batched_conv or w.ndim == 5) and fused_epilogue:
         y = client_conv(x, w, method=conv_method if batched_conv
-                        else "conv")
+                        else "conv", bias=p["b"], fused_epilogue=True)
     else:
-        y = jax.lax.conv_general_dilated(
-            x, w, window_strides=(1, 1), padding="SAME",
-            dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    b = p["b"].astype(x.dtype)
-    if b.ndim > 1:                       # stacked (C, Cout) bias
-        b = b.reshape(b.shape[:-1] + (1, 1, 1) + b.shape[-1:])
-    y = jax.nn.relu(y + b)
+        if batched_conv or w.ndim == 5:
+            y = client_conv(x, w, method=conv_method if batched_conv
+                            else "conv")
+        else:
+            y = jax.lax.conv_general_dilated(
+                x, w, window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        y = jax.nn.relu(y + broadcast_bias(p["b"]).astype(x.dtype))
     if gate is not None:
         # leading gate axes align with y's leading axes, last is the
         # unit axis: (U,) / per-example (B, U) / stacked (C, U) or
@@ -104,19 +109,22 @@ def init_params(cfg, key):
 
 
 def client_forward(cfg, p, images, extras=None, *, dtype=None,
-                   batched_conv=False, conv_method=None, **_):
+                   batched_conv=False, conv_method=None,
+                   fused_epilogue=False, **_):
     """Client tower.  Works unstacked (one client: images (B, H, W, 3))
     or stacked (all clients at once: images (C, B, H, W, 3) with
     (C, ...)-leading params — one batched-GEMM dispatch per block)."""
     x = images.astype(dtype or jnp.float32)
     for bp in p["blocks"]:
         x = _conv_block(bp, x, batched_conv=batched_conv,
-                        conv_method=conv_method)
+                        conv_method=conv_method,
+                        fused_epilogue=fused_epilogue)
     return x  # split activations (B, H', W', C)
 
 
 def server_forward(cfg, p, acts, tokens=None, extras=None, *, gates=None,
-                   batched_conv=False, conv_method=None, **_):
+                   batched_conv=False, conv_method=None,
+                   fused_epilogue=False, **_):
     """gates: {"blocks": [...], "fc1": ..., "fc2": ...} with each leaf
     either (U,) — one client's unit mask shared across the batch — or
     (B, U) per-example gates.  The per-example form is what lets the
@@ -132,7 +140,8 @@ def server_forward(cfg, p, acts, tokens=None, extras=None, *, gates=None,
     for i, bp in enumerate(p["blocks"]):
         g = gates["blocks"][i] if gates is not None else None
         x = _conv_block(bp, x, gate=g, batched_conv=batched_conv,
-                        conv_method=conv_method)
+                        conv_method=conv_method,
+                        fused_epilogue=fused_epilogue)
     x = x.reshape(x.shape[0], -1)
 
     def fc(pp, x, gate, act=True):
