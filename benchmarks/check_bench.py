@@ -1,0 +1,154 @@
+"""Bench-regression gate: compare a smoke-run ``BENCH_all.json``
+against the committed first-trajectory-point baseline
+(``benchmarks/baselines/BENCH_baseline.json``).
+
+  python -m benchmarks.check_bench [--current=BENCH_all.json]
+      [--baseline=benchmarks/baselines/BENCH_baseline.json]
+      [--tol=0.25] [--timing-tol=TOL] [--update]
+
+What is compared
+----------------
+Sections are matched by name, tables by name, rows by position (row-key
+cell must agree).  Within matched rows, the gate checks the
+PER-ITERATION metrics:
+
+* ``*speedup*`` / trailing-``x`` ratio columns — dimensionless, so they
+  transfer across hardware; a regression is ``current <
+  baseline * (1 - tol)`` (ratios are higher-is-better; getting faster
+  never fails).
+* ``*_ms`` absolute per-iteration timings — lower-is-better, gated at
+  ``--timing-tol`` (defaults to ``--tol``).  Absolute wall-clock only
+  means something against a baseline from like hardware: CI passes a
+  loose ``--timing-tol`` against the committed box's numbers and the
+  tight ratio gate does the real work; refresh the baseline with
+  ``--update`` when re-anchoring on new hardware.
+
+Non-numeric cells (PASS/MISS verdicts, config strings) are ignored.
+A section/table present in the baseline but MISSING from the current
+run fails the gate (that is how a silently-broken benchmark shows up);
+extra current-only tables (e.g. multi-device ``cohort_shard`` rows) are
+ignored so richer environments don't need their own baseline.
+
+Exit status: 0 clean, 1 on regressions/missing coverage — wired after
+``python -m benchmarks.run --scale=smoke`` in CI so the perf
+trajectory is actually gated, not just uploaded.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+DEFAULT_BASELINE = "benchmarks/baselines/BENCH_baseline.json"
+
+
+def _num(cell):
+    try:
+        s = str(cell).strip()
+        # ratio cells are printed with a trailing multiplier suffix
+        # ("16.1x") in the kernel tables — still numeric for the gate
+        return float(s[:-1] if s.endswith("x") else s)
+    except (TypeError, ValueError):
+        return None
+
+
+def _col_kind(header: str) -> str:
+    """'ratio' (higher-better), 'ms' (lower-better) or 'skip'."""
+    h = header.lower()
+    if "speedup" in h or h.endswith("_x") or h == "x" or "ratio" in h:
+        return "ratio"
+    if h.endswith("_ms") or h == "ms" or "ms/" in h:
+        return "ms"
+    return "skip"
+
+
+def _tables(payload: dict) -> dict:
+    out = {}
+    for sec in payload.get("sections", [payload]):
+        for t in sec.get("tables", []):
+            out[(sec.get("name", "?"), t["table"])] = t
+    return out
+
+
+def compare(current: dict, baseline: dict, *, tol: float,
+            timing_tol: float) -> list:
+    """Returns a list of human-readable regression strings."""
+    problems = []
+    cur_tables = _tables(current)
+    for key, bt in _tables(baseline).items():
+        ct = cur_tables.get(key)
+        if ct is None:
+            problems.append(f"MISSING table {key[0]}/{key[1]!r} "
+                            "(benchmark silently dropped?)")
+            continue
+        if ct["header"] != bt["header"]:
+            problems.append(f"HEADER changed for {key[1]!r}: "
+                            f"{bt['header']} -> {ct['header']}")
+            continue
+        if len(ct["rows"]) != len(bt["rows"]):
+            problems.append(f"ROW COUNT changed for {key[1]!r}: "
+                            f"{len(bt['rows'])} -> {len(ct['rows'])}")
+            continue
+        for bi, (brow, crow) in enumerate(zip(bt["rows"], ct["rows"])):
+            if brow[:1] != crow[:1]:
+                problems.append(f"{key[1]!r} row {bi}: key changed "
+                                f"{brow[:1]} -> {crow[:1]}")
+                continue
+            for h, bcell, ccell in zip(bt["header"], brow, crow):
+                kind = _col_kind(h)
+                if kind == "skip":
+                    continue
+                b, c = _num(bcell), _num(ccell)
+                if b is None or c is None or b == 0:
+                    continue
+                t = tol if kind == "ratio" else timing_tol
+                if kind == "ratio" and c < b * (1 - t):
+                    problems.append(
+                        f"{key[1]!r} row {brow[0]} {h}: {c:.3g} < "
+                        f"baseline {b:.3g} - {t:.0%}")
+                elif kind == "ms" and c > b * (1 + t):
+                    problems.append(
+                        f"{key[1]!r} row {brow[0]} {h}: {c:.3g} ms > "
+                        f"baseline {b:.3g} + {t:.0%}")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_all.json")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="relative tolerance on ratio columns")
+    ap.add_argument("--timing-tol", type=float, default=None,
+                    help="tolerance on absolute *_ms columns "
+                         "(default: --tol; loosen across hardware)")
+    ap.add_argument("--update", action="store_true",
+                    help="adopt the current run as the new baseline")
+    args = ap.parse_args()
+
+    if args.update:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"[baseline updated: {args.current} -> {args.baseline}]")
+        return
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    problems = compare(current, baseline, tol=args.tol,
+                       timing_tol=args.timing_tol
+                       if args.timing_tol is not None else args.tol)
+    n_tables = len(_tables(baseline))
+    if problems:
+        print(f"bench regression gate: {len(problems)} problem(s) "
+              f"across {n_tables} baseline tables")
+        for p in problems:
+            print(f"  REGRESSION: {p}")
+        sys.exit(1)
+    print(f"bench regression gate: clean ({n_tables} baseline tables "
+          f"checked, tol={args.tol:.0%})")
+
+
+if __name__ == "__main__":
+    main()

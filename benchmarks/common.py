@@ -59,6 +59,35 @@ def scale() -> Scale:
     return SCALES[name]
 
 
+def devices_arg(default: int = 0) -> int:
+    """``--devices=N`` CLI override (0 = leave the backend alone)."""
+    for a in sys.argv[1:]:
+        if a.startswith("--devices="):
+            return int(a.split("=", 1)[1])
+    return default
+
+
+def ensure_host_devices(n: int) -> int:
+    """Request ``n`` emulated host CPU devices for multi-device rows.
+
+    XLA reads ``--xla_force_host_platform_device_count`` ONCE, when the
+    backend initializes — so this only works if no jax computation ran
+    yet in this process (benchmark ``__main__``s call it first thing).
+    Returns the device count actually available; callers emit their
+    multi-device rows only when it matches."""
+    import jax
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+    got = jax.device_count()
+    if n > 1 and got != n:
+        print(f"[devices: wanted {n}, backend has {got} — "
+              "was jax already initialized? multi-device rows need "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count={n}]")
+    return got
+
+
 def lenet_cfg():
     return get_config("lenet-cifar")
 

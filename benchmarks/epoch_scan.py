@@ -24,7 +24,19 @@ vs rounds-per-dispatch ∈ {1, 2, 8, R}:
 Acceptance (paper LeNet config, CI CPU box): best epoch row >= 1.15x
 per-iteration over the PR-3 per-round round-scan baseline.
 
+``--devices=N`` adds the cohort-sharded columns: the same epoch-scan
+config with ``shard_clients=True`` on an N-device ``(data,)`` mesh
+(C/N clients per shard) vs the 1-mesh run — per-iteration ms and the
+shard speedup.  On CPU the N devices are EMULATED host devices
+(``--xla_force_host_platform_device_count``), so the column measures
+dispatch/collective overhead and partitioning correctness, not real
+parallel speedup — the same rows on a real multi-chip box are where
+the scaling shows (2-core CI boxes typically report < 1x).  The flag
+must be first to touch jax in the process (XLA reads the device-count
+override once, at backend init).
+
   PYTHONPATH=src python -m benchmarks.epoch_scan [--scale=smoke|std|paper]
+                                                 [--devices=N]
 """
 from __future__ import annotations
 
@@ -33,7 +45,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, lenet_cfg, scale, write_bench_json
+from benchmarks.common import (devices_arg, emit, ensure_host_devices,
+                               lenet_cfg, scale, write_bench_json)
 from repro.core.adasplit import AdaSplitHParams, AdaSplitTrainer
 from repro.data.synthetic import mixed_noniid
 
@@ -81,9 +94,10 @@ def _per_round_iter_ms(cfg, clients, batch, R, rd, t_iters):
     return best / (R * t_iters) * 1e3
 
 
-def _epoch_iter_ms(cfg, clients, batch, R, rd, t_iters, chunk):
+def _epoch_iter_ms(cfg, clients, batch, R, rd, t_iters, chunk,
+                   with_trainer=False, **hp_kw):
     tr = _mk(cfg, clients, batch, R, epoch_scan=True,
-             epoch_chunk_rounds=chunk)
+             epoch_chunk_rounds=chunk, **hp_kw)
     rounds_data = [rd] * R
     tr._run_epoch_scan(rounds_data, t_iters, True)   # warmup: compile
     best = float("inf")
@@ -91,7 +105,44 @@ def _epoch_iter_ms(cfg, clients, batch, R, rd, t_iters, chunk):
         t0 = time.time()
         tr._run_epoch_scan(rounds_data, t_iters, True)
         best = min(best, time.time() - t0)
-    return best / (R * t_iters) * 1e3
+    ms = best / (R * t_iters) * 1e3
+    return (ms, tr) if with_trainer else ms
+
+
+def _shard_section(cfg, batch, sizes, R, t_iters=T):
+    """Cohort-sharded epoch scan vs the same config on one mesh slice:
+    per-iteration ms at shard_clients={off,on} on the active device
+    count.  Interconnect GB per epoch comes from the analytic meter."""
+    import jax
+    ndev = jax.device_count()
+    rows = []
+    for n in sizes:
+        if n % ndev:
+            print(f"[cohort_shard: skip N={n} — not divisible by "
+                  f"{ndev} devices]")
+            continue
+        clients = mixed_noniid(n_clients=n, n_per_client=batch * t_iters,
+                               n_test=8, seed=0)
+        rd = _round_data(clients, batch, t_iters)
+        base_ms = _epoch_iter_ms(cfg, clients, batch, R, rd, t_iters, 0)
+        sh_ms, tr = _epoch_iter_ms(cfg, clients, batch, R, rd, t_iters,
+                                   0, with_trainer=True,
+                                   shard_clients=True)
+        # per-epoch interconnect: the timed trainer's meter already
+        # billed the analytic all-gather bytes (per-iteration x T x R)
+        inter_gb = tr._iteration_interconnect_bytes() * t_iters * R / 1e9
+        speed = base_ms / max(sh_ms, 1e-9)
+        rows.append([n, ndev, f"{base_ms:.2f}", f"{sh_ms:.2f}",
+                     f"{speed:.2f}", f"{inter_gb:.5f}"])
+        print(f"[{cfg.name} N={n} B={batch} T={t_iters}] "
+              f"shard_clients on {ndev} devices: {sh_ms:.2f} ms/it vs "
+              f"1-shard {base_ms:.2f} -> {speed:.2f}x "
+              f"({inter_gb:.5f} GB interconnect/epoch)")
+    if rows:
+        emit(f"cohort_shard {cfg.name} B={batch} T={t_iters} "
+             "(epoch scan ms/iteration, shard_clients off vs on)",
+             rows, ["n_clients", "devices", "one_shard_ms", "sharded_ms",
+                    "shard_speedup", "interconnect_gb_per_epoch"])
 
 
 def _section(cfg, batch, sizes, R, chunks, t_iters=T, accept_at=None):
@@ -128,11 +179,20 @@ def _section(cfg, batch, sizes, R, chunks, t_iters=T, accept_at=None):
 
 
 def main():
+    ndev = devices_arg()
+    if ndev > 1:
+        ensure_host_devices(ndev)   # must precede any jax compute
+    import jax
+    multi = jax.device_count() > 1
     if scale().smoke:
         _section(lite_cfg(), 2, [8], R=4, chunks=(1, 2, 0), t_iters=2)
+        if multi:
+            _shard_section(lite_cfg(), 2, [8], R=4, t_iters=2)
         return
     _section(lenet_cfg(), 4, [16, 32], R=16, chunks=(1, 2, 8, 0),
              accept_at=32)
+    if multi:
+        _shard_section(lenet_cfg(), 4, [16, 32], R=16)
 
 
 if __name__ == "__main__":

@@ -12,7 +12,11 @@ table3..table6 (sensitivity), fig1 (trade-off curve), kernels
 Each section's tables are flushed to a machine-readable
 ``BENCH_<section>.json`` (benchmarks.common.write_bench_json), and the
 run ends by aggregating everything it wrote into ``BENCH_all.json`` —
-the cross-PR perf trajectory record.
+the cross-PR perf trajectory record, gated in CI against the committed
+``benchmarks/baselines/BENCH_baseline.json`` by
+``benchmarks.check_bench``.  A section that raises is reported and the
+run EXITS NON-ZERO at the end (a partial BENCH_all.json must never
+pass for a healthy one).
 """
 from __future__ import annotations
 
@@ -47,7 +51,7 @@ def main() -> None:
         ("ablation_masks", ablation_masks.main),
         ("kernels", kernel_bench.main),
     ]
-    written = []
+    written, failed = [], []
     for name, fn in sections:
         if only and name not in only:
             continue
@@ -56,6 +60,7 @@ def main() -> None:
             fn()
         except Exception as e:  # keep the suite going, report at end
             print(f"### {name} FAILED: {e!r}\n")
+            failed.append(name)
         path = write_bench_json(name)
         if path:
             written.append(path)
@@ -85,6 +90,11 @@ def main() -> None:
               f"({len(written)} sections)]")
 
     print(f"benchmarks completed in {time.time()-t0:.0f}s")
+    if failed:
+        # a failing section must fail the run (and the CI bench step):
+        # a partial BENCH_all.json must never pass for a healthy one
+        print(f"FAILED sections: {', '.join(failed)}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -140,6 +140,12 @@ class Meter:
     bandwidth_bytes: float = 0.0
     client_flops: float = 0.0
     server_flops: float = 0.0
+    # cross-DEVICE collective traffic (cohort sharding's all-gathers),
+    # billed separately from the protocol's client<->server payload:
+    # eq. 2 bandwidth is a property of the split protocol and must stay
+    # device-layout-invariant, while interconnect bytes are a property
+    # of the execution mesh (0 on a single device).
+    interconnect_bytes: float = 0.0
 
     def add_payload(self, nbytes: float):
         self.bandwidth_bytes += nbytes
@@ -149,6 +155,9 @@ class Meter:
 
     def add_server_flops(self, f: float):
         self.server_flops += f
+
+    def add_interconnect(self, nbytes: float):
+        self.interconnect_bytes += nbytes
 
     @property
     def bandwidth_gb(self) -> float:
@@ -165,7 +174,7 @@ class Meter:
     def ingest_round(self, *, acts_shape, batch, n_clients, n_iters,
                      client_flops_per_example, server_flops_per_example,
                      nnz_fracs=None, n_selected=None, grad_down=False,
-                     dtype_bytes=4):
+                     dtype_bytes=4, interconnect_bytes=0.0):
         """Bill a whole round of the protocol after ONE device fetch.
 
         The round scan (core/adasplit.py) accumulates per-iteration
@@ -179,6 +188,10 @@ class Meter:
         nnz_fracs: optional (n_iters, k) per-selected-client activation
         nnz fractions (activation sparsification on); ``n_selected`` (k)
         is required when ``nnz_fracs`` is None and ignored otherwise.
+        ``interconnect_bytes``: the round's cross-device collective
+        traffic under cohort sharding (the per-shard tallies are
+        analytic on the host, summed here at the same one-fetch cadence
+        as the payload billing; 0 on a single device).
         """
         if nnz_fracs is not None:
             nnz_fracs = np.asarray(nnz_fracs)
@@ -193,11 +206,14 @@ class Meter:
             dtype_bytes=dtype_bytes))
         self.add_server_flops(fwd_bwd * server_flops_per_example
                               * batch * n_iters * n_selected)
+        if interconnect_bytes:
+            self.add_interconnect(interconnect_bytes)
 
     def ingest_epoch(self, *, n_rounds, acts_shape, batch, n_clients,
                      n_iters, client_flops_per_example,
                      server_flops_per_example, nnz_fracs=None,
-                     n_selected=None, grad_down=False, dtype_bytes=4):
+                     n_selected=None, grad_down=False, dtype_bytes=4,
+                     interconnect_bytes=0.0):
         """Bill a whole epoch (R on-device rounds, ONE device fetch).
 
         Literally ``n_rounds`` sequential :meth:`ingest_round` calls —
@@ -206,6 +222,8 @@ class Meter:
         same per-round history records as the per-round-dispatch path.
 
         nnz_fracs: optional (n_rounds, n_iters, k) stacked fractions.
+        ``interconnect_bytes`` is per ROUND (forwarded to each
+        :meth:`ingest_round`).
         """
         summaries = []
         for r in range(n_rounds):
@@ -216,13 +234,19 @@ class Meter:
                 client_flops_per_example=client_flops_per_example,
                 server_flops_per_example=server_flops_per_example,
                 nnz_fracs=fr, n_selected=n_selected,
-                grad_down=grad_down, dtype_bytes=dtype_bytes)
+                grad_down=grad_down, dtype_bytes=dtype_bytes,
+                interconnect_bytes=interconnect_bytes)
             summaries.append(self.summary())
         return summaries
+
+    @property
+    def interconnect_gb(self) -> float:
+        return self.interconnect_bytes / 1e9
 
     def summary(self) -> dict:
         return {
             "bandwidth_gb": self.bandwidth_gb,
             "client_tflops": self.client_tflops,
             "total_tflops": self.total_tflops,
+            "interconnect_gb": self.interconnect_gb,
         }

@@ -58,6 +58,34 @@ the differential oracle for the one above:
    lets fusion reach across round boundaries and perturbs the last
    float bit) and is also faster on CPU than an R-fold unrolled
    program thrashing cache.
+4. **Cohort-sharded** (``shard_clients=True``, orthogonal to the
+   round/epoch rungs): the stacked client axis C is partitioned across
+   the mesh's ``data`` axis with ``shard_map`` — C/ndev clients per
+   device, each running ITS OWN slice of the vmapped client step, the
+   batched-GEMM conv panels, the per-client Adam moments, masks and
+   the (N,)-leaf UCB state.  The protocol's control plane stays
+   bit-identical to the single-device run by construction:
+
+   * selection = local ``ucb_advantage`` on the shard's state slice,
+     one (N,)-float all-gather, then a REPLICATED top-k
+     (``ucb_select_from_advantage``) — the gathered advantage vector
+     is elementwise identical to the 1-device one;
+   * the global/server step runs REPLICATED on every device over the
+     all-gathered selected activations / masks / labels (k selected
+     clients, exactly the arrays the split protocol transmits anyway),
+     so the server params, mask updates and per-client CE losses are
+     computed by the SAME reduction-order program as on one device —
+     no cross-shard psum touches the training math;
+   * each shard then scatters the selected rows it owns back into its
+     local slice (``masks_mod.scatter_clients_shard``) and applies the
+     elementwise ``ucb_update`` to its local UCB slice.
+
+   The all-gather traffic (advantages + selected-cohort payloads) is
+   billed to the NEW ``Meter.interconnect_bytes`` channel — eq. 2
+   protocol bandwidth stays device-layout-invariant.  C must divide by
+   the mesh's data size; otherwise the trainer warns and falls back to
+   the replicated single-device path (the same must-always-lower
+   policy as ``sharding/rules.py``).
 
 Within one iteration the global phase is the PR-1 batched step: the
 selected S = eta*N clients run as one (S*B)-flattened forward with
@@ -100,12 +128,15 @@ same in-graph orchestrator via ``launch.steps.build_ucb_train_step``).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import masks as masks_mod
@@ -114,11 +145,14 @@ from repro.core.accounting import (Meter, lenet_flops_per_example,
 from repro.core.c3 import c3_score
 from repro.core.losses import (accuracy, cross_entropy, l1_penalty,
                                ntxent_supervised)
-from repro.core.orchestrator import (Orchestrator, ucb_new_round,
-                                     ucb_select, ucb_update)
+from repro.core.orchestrator import (Orchestrator, ucb_advantage,
+                                     ucb_new_round, ucb_select,
+                                     ucb_select_from_advantage, ucb_update)
 from repro.kernels.client_conv import client_proj
 from repro.models import lenet
 from repro.optim.adam import adam_init, adam_update
+from repro.sharding.rules import (MeshAxes, cohort_pspecs,
+                                  staged_cohort_spec)
 
 
 @dataclass
@@ -150,6 +184,9 @@ class AdaSplitHParams:
     batched_conv: bool = True       # im2col batched-GEMM convs (False = ref)
     fused_epilogue: bool = False    # bias+ReLU in the Pallas GEMM epilogue
                                     # (TPU; identical XLA ops elsewhere)
+    shard_clients: bool = False     # shard_map the stacked client axis C
+                                    # over the mesh's `data` axis (falls
+                                    # back to 1-device when C % ndev != 0)
     seed: int = 0
 
 
@@ -166,7 +203,8 @@ def _proj_apply(p, acts):
 
 
 class AdaSplitTrainer:
-    def __init__(self, cfg: ModelConfig, hp: AdaSplitHParams, clients):
+    def __init__(self, cfg: ModelConfig, hp: AdaSplitHParams, clients,
+                 *, mesh=None):
         self.cfg, self.hp, self.clients = cfg, hp, clients
         self.n = len(clients)
         key = jax.random.PRNGKey(hp.seed)
@@ -204,7 +242,96 @@ class AdaSplitTrainer:
         self.history: List[Dict[str, Any]] = []
         self._rng = np.random.default_rng(hp.seed)
         self._round_fns: Dict[Any, Any] = {}
+        self._mesh = self._ax = None
+        self._shard = False
+        if hp.shard_clients:
+            self._setup_cohort_sharding(mesh)
         self._compile()
+
+    # ------------------------------------------------------------------
+    # cohort sharding: partition the stacked client axis on `data`
+    # ------------------------------------------------------------------
+    def _setup_cohort_sharding(self, mesh):
+        """Enable ``shard_clients``: validate divisibility, build the
+        carry PartitionSpec trees once (shapes are static for the
+        trainer's lifetime) and place the stacked per-client state on
+        the mesh.  Non-divisible cohorts warn and fall back to the
+        single-device path — the scan drivers and their outputs are
+        identical either way, sharding only changes layout."""
+        if not (self.hp.round_scan and self.hp.global_batch):
+            warnings.warn("shard_clients requires the round/epoch scan "
+                          "drivers (round_scan=True, global_batch=True); "
+                          "falling back to the single-device path")
+            return
+        from repro.launch.mesh import make_cohort_mesh
+        mesh = mesh if mesh is not None else make_cohort_mesh()
+        ax = MeshAxes.from_mesh(mesh)
+        if ax.data_size <= 1:
+            return
+        if self.n % ax.data_size:
+            warnings.warn(
+                f"shard_clients: {self.n} clients not divisible by "
+                f"data mesh size {ax.data_size}; falling back to the "
+                "replicated single-device path")
+            return
+        self._mesh, self._ax, self._shard = mesh, ax, True
+        self._n_local = self.n // ax.data_size
+
+        def rep(tree):
+            return jax.tree.map(lambda _: P(), tree)
+
+        def coh(tree):
+            return cohort_pspecs(tree, ax, cohort_size=self.n)
+
+        self._carry_specs = (
+            coh({"c": self.client_params, "p": self.proj_params}),
+            coh(self.c_opt), rep(self.server_params), rep(self.s_opt),
+            coh(self.masks), coh(self.m_opt), coh(self.orch.state))
+        # adopt the sharded layout for the live state
+        (cp_pp, self.c_opt, self.server_params, self.s_opt, self.masks,
+         self.m_opt, self.orch.state) = jax.tree.map(
+            lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+            self._carry(), self._carry_specs)
+        self.client_params, self.proj_params = cp_pp["c"], cp_pp["p"]
+
+    def _put_staged(self, x, *, cohort_dim):
+        """Device placement for staged (T, C, B, ...) / (R, T, C, B,
+        ...) round data: cohort axis on ``data`` when sharding, plain
+        transfer otherwise."""
+        if not self._shard:
+            return jax.device_put(x)
+        spec = staged_cohort_spec(self._ax, cohort_dim + 1,
+                                  cohort_dim=cohort_dim)
+        return jax.device_put(x, NamedSharding(self._mesh, spec))
+
+    def _tree_bytes(self, tree) -> int:
+        return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+    def _iteration_interconnect_bytes(self) -> float:
+        """Analytic cross-device bytes for ONE sharded global
+        iteration: every all-gather in the iteration body moves
+        (ndev - 1) x its full array size across the mesh (ring
+        convention).  Gathered per iteration: the (N,) advantages, the
+        split activations + labels of ALL clients (the candidates the
+        replicated global step selects from), the mask + mask-opt
+        pytrees, and — on the joint ablation — the client params/opt
+        and inputs.  Local-phase iterations gather nothing."""
+        if not self._shard:
+            return 0.0
+        hp = self.hp
+        full = 4 * self.n                                   # advantages
+        full += 4 * self.n * hp.batch_size * int(
+            np.prod(self._acts_spatial))                    # activations
+        full += 4 * self.n * hp.batch_size                  # labels
+        full += self._tree_bytes(self.masks)
+        full += self._tree_bytes(self.m_opt)
+        if hp.server_grad_to_client:
+            full += self._tree_bytes(
+                {"c": self.client_params, "p": self.proj_params})
+            full += self._tree_bytes(self.c_opt)
+            full += 4 * self.n * hp.batch_size * 3 \
+                * self.cfg.image_size ** 2                  # images
+        return float((self._ax.data_size - 1) * full)
 
     # ------------------------------------------------------------------
     def _acts_dim(self):
@@ -481,13 +608,41 @@ class AdaSplitTrainer:
     def _iteration_fn(self, global_phase: bool):
         """The fused per-iteration body shared by the round and epoch
         scans: client-step -> in-graph UCB select -> global-step ->
-        UCB update, carry = (params, opts, masks, bandit state)."""
+        UCB update, carry = (params, opts, masks, bandit state).
+
+        Under cohort sharding the same body runs INSIDE a ``shard_map``
+        over the ``data`` axis: the carry trees and the staged batch
+        are the shard's (C/ndev, ...) slices, selection all-gathers the
+        per-shard advantages into the replicated top-k, the global step
+        runs replicated over the all-gathered selected cohort, and each
+        shard scatters back / ``ucb_update``s only the rows it owns —
+        so the outputs (and the scan carry, viewed globally) are
+        bit-identical to the unsharded body."""
         hp = self.hp
         n, k, gamma = self.n, self.orch.k, self.hp.gamma
         client_step = self._client_step_fn
         global_step = self._global_step_fn
         global_joint = self._global_joint_fn
         select_key = self.orch.select_key   # one key schedule, all paths
+        sharded = self._shard
+        if sharded:
+            axis, nl = self._ax.data_spec, self._n_local
+            assert isinstance(axis, str), axis  # 1-D cohort mesh
+
+        def gather_full(tree):
+            """Shard-local (C/ndev, ...) leaves -> global (C, ...)."""
+            if not sharded:
+                return tree
+            return jax.tree.map(
+                lambda l: jax.lax.all_gather(l, axis, axis=0, tiled=True),
+                tree)
+
+        def scatter_back(tree, idx, new):
+            if not sharded:
+                return masks_mod.scatter_clients(tree, idx, new)
+            off = jax.lax.axis_index(axis) * nl
+            return masks_mod.scatter_clients_shard(tree, idx, new,
+                                                   offset=off, size=nl)
 
         def _round_iteration(carry, xs):
             cp_pp, c_opt, sp, s_opt, masks, m_opt, ucb = carry
@@ -496,27 +651,39 @@ class AdaSplitTrainer:
             if not global_phase:
                 return (cp_pp, c_opt, sp, s_opt, masks, m_opt, ucb), None
 
-            idx = ucb_select(ucb, k, select_key(t))
-            masks_sel = masks_mod.gather_clients(masks, idx)
-            mopt_sel = masks_mod.gather_clients(m_opt, idx)
-            acts_sel, ys_sel = acts[idx], y_t[idx]
+            if sharded:
+                adv = jax.lax.all_gather(ucb_advantage(ucb), axis,
+                                         tiled=True)
+                idx = ucb_select_from_advantage(adv, k, select_key(t))
+            else:
+                idx = ucb_select(ucb, k, select_key(t))
+            masks_sel = masks_mod.gather_clients(gather_full(masks), idx)
+            mopt_sel = masks_mod.gather_clients(gather_full(m_opt), idx)
+            acts_sel = gather_full(acts)[idx]
+            ys_sel = gather_full(y_t)[idx]
             if hp.server_grad_to_client:
-                cp_sel = masks_mod.gather_clients(cp_pp, idx)
-                copt_sel = masks_mod.gather_clients(c_opt, idx)
+                cp_sel = masks_mod.gather_clients(gather_full(cp_pp), idx)
+                copt_sel = masks_mod.gather_clients(gather_full(c_opt),
+                                                    idx)
                 (cp_sel, copt_sel, sp, s_opt, masks_sel, mopt_sel, ces,
                  fracs) = global_joint(cp_sel, copt_sel, sp, s_opt,
-                                       masks_sel, mopt_sel, x_t[idx],
+                                       masks_sel, mopt_sel,
+                                       gather_full(x_t)[idx],
                                        ys_sel, acts_sel)
-                cp_pp = masks_mod.scatter_clients(cp_pp, idx, cp_sel)
-                c_opt = masks_mod.scatter_clients(c_opt, idx, copt_sel)
+                cp_pp = scatter_back(cp_pp, idx, cp_sel)
+                c_opt = scatter_back(c_opt, idx, copt_sel)
             else:
                 sp, s_opt, masks_sel, mopt_sel, ces, fracs = global_step(
                     sp, s_opt, masks_sel, mopt_sel, acts_sel, ys_sel)
-            masks = masks_mod.scatter_clients(masks, idx, masks_sel)
-            m_opt = masks_mod.scatter_clients(m_opt, idx, mopt_sel)
+            masks = scatter_back(masks, idx, masks_sel)
+            m_opt = scatter_back(m_opt, idx, mopt_sel)
 
             sel_mask = jnp.zeros((n,), jnp.float32).at[idx].set(1.0)
             dense = jnp.zeros((n,), jnp.float32).at[idx].set(ces)
+            if sharded:
+                off = jax.lax.axis_index(axis) * nl
+                sel_mask = jax.lax.dynamic_slice_in_dim(sel_mask, off, nl)
+                dense = jax.lax.dynamic_slice_in_dim(dense, off, nl)
             ucb = ucb_update(ucb, sel_mask, dense, gamma=gamma)
             carry = (cp_pp, c_opt, sp, s_opt, masks, m_opt, ucb)
             return carry, (idx, ces, fracs)
@@ -545,10 +712,30 @@ class AdaSplitTrainer:
                                 (xs_round, ys_round, t_idx),
                                 unroll=unroll)
 
+        round_fn = self._wrap_shard_map(round_fn, staged_cohort_dim=1)
         donate = () if on_cpu else (0,)
         fn = jax.jit(round_fn, donate_argnums=donate)
         self._round_fns[cache_key] = fn
         return fn
+
+    def _wrap_shard_map(self, fn, *, staged_cohort_dim: int):
+        """Cohort-shard a round/epoch scan driver: carry trees per
+        ``self._carry_specs``, staged data with the cohort axis
+        (dim ``staged_cohort_dim``) on ``data``, iteration counters and
+        the stacked (idx, ces, fracs) outputs replicated (every shard
+        computes the identical selection / CE / nnz values, so P() out
+        specs just take the one copy).  ``check_rep=False``: the body
+        mixes manual collectives with replicated compute, which the
+        static replication checker can't see through."""
+        if not self._shard:
+            return fn
+        data_spec = staged_cohort_spec(self._ax, staged_cohort_dim + 1,
+                                       cohort_dim=staged_cohort_dim)
+        return shard_map(
+            fn, mesh=self._mesh,
+            in_specs=(self._carry_specs, data_spec, data_spec, P()),
+            out_specs=(self._carry_specs, P()),
+            check_rep=False)
 
     def _epoch_fn(self, R: int, T: int, global_phase: bool):
         """One jitted fn running R whole rounds: an outer scan whose
@@ -589,6 +776,7 @@ class AdaSplitTrainer:
         def epoch_fn(carry, xs_ep, ys_ep, t_ep):
             return jax.lax.scan(round_body, carry, (xs_ep, ys_ep, t_ep))
 
+        epoch_fn = self._wrap_shard_map(epoch_fn, staged_cohort_dim=2)
         # Donate the carry on EVERY backend (unlike the per-round fn,
         # which keeps the PR-2 CPU behavior as the baseline): the epoch
         # carry only ever flows forward — into the next chunk's
@@ -639,8 +827,9 @@ class AdaSplitTrainer:
                            self.orch._n_selects + T, dtype=jnp.int32)
 
         fn = self._round_fn(T, global_phase)
-        carry, outs = fn(self._carry(), jnp.asarray(xs_round),
-                         jnp.asarray(ys_round), t_idx)
+        carry, outs = fn(self._carry(),
+                         self._put_staged(xs_round, cohort_dim=1),
+                         self._put_staged(ys_round, cohort_dim=1), t_idx)
         ucb = self._set_carry(carry)
 
         acts_shape = (hp.batch_size,) + self._acts_spatial
@@ -653,7 +842,9 @@ class AdaSplitTrainer:
                 server_flops_per_example=self._fl_s,
                 nnz_fracs=fracs_all if hp.act_l1 else None,
                 n_selected=idx_all.shape[1],
-                grad_down=hp.server_grad_to_client)
+                grad_down=hp.server_grad_to_client,
+                interconnect_bytes=self._iteration_interconnect_bytes()
+                * T)
             self.orch.ingest_round(idx_all, ces_all, state=ucb)
         else:
             self.meter.ingest_round(
@@ -700,7 +891,8 @@ class AdaSplitTrainer:
             ys = np.stack([rd[1] for rd in rds])
             t_idx = (base + (r0 + np.arange(rc))[:, None] * T
                      + np.arange(T)[None, :]).astype(np.int32)
-            return (jax.device_put(xs), jax.device_put(ys),
+            return (self._put_staged(xs, cohort_dim=2),
+                    self._put_staged(ys, cohort_dim=2),
                     jax.device_put(t_idx))
 
         starts = list(range(0, R, chunk))
@@ -729,7 +921,9 @@ class AdaSplitTrainer:
             summaries = self.meter.ingest_epoch(
                 n_rounds=R, nnz_fracs=fracs_all if hp.act_l1 else None,
                 n_selected=idx_all.shape[-1],
-                grad_down=hp.server_grad_to_client, **bill)
+                grad_down=hp.server_grad_to_client,
+                interconnect_bytes=self._iteration_interconnect_bytes()
+                * T, **bill)
             self.orch.ingest_epoch(idx_all, ces_all, state=ucb)
         else:
             summaries = self.meter.ingest_epoch(n_rounds=R, n_selected=0,

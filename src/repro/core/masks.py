@@ -109,6 +109,24 @@ def scatter_clients(tree, idx, new):
                         tree, new)
 
 
+def scatter_clients_shard(tree, idx, new, *, offset, size):
+    """Shard-local :func:`scatter_clients` for cohort-sharded pytrees.
+
+    Inside a ``shard_map`` each device holds a (size, ...) slice of the
+    stacked (C, ...) pytree covering global client ids
+    [offset, offset + size).  ``idx`` (S,) are GLOBAL ids and ``new``
+    the replicated (S, ...) updated rows; every shard writes only the
+    rows it owns (out-of-range rows redirected past the slice and
+    dropped by scatter ``mode="drop"``), so the union over shards is
+    exactly the global ``scatter_clients``.
+    """
+    local = idx - offset
+    safe = jnp.where((local >= 0) & (local < size), local, size)
+    return jax.tree.map(
+        lambda l, n: l.at[safe].set(n.astype(l.dtype), mode="drop"),
+        tree, new)
+
+
 def stack_client_gates(per_client_gates):
     """Stack per-client gate pytrees (leaves (n_rep, U)) into per-example
     gates (leaves (n_rep, B, U)) for a mixed-client serving batch."""

@@ -17,7 +17,15 @@ Two faces over ONE implementation of the math:
   selection live inside the round ``lax.scan`` (core/adasplit.py) and
   inside the LM train step (launch/steps.py) with no host sync.
   Tie-breaking uses keyed jitter (``jax.random.uniform`` in [0, 1e-9))
-  so selection is a pure function of (state, key).
+  so selection is a pure function of (state, key).  Under cohort
+  sharding (``shard_clients=True``) the (N,)-leaf state rides the scan
+  SHARDED on the mesh's ``data`` axis: updates are elementwise (each
+  shard touches only its own client slice) and selection splits into a
+  local ``ucb_advantage`` + all-gather + replicated
+  ``ucb_select_from_advantage`` — bit-identical to the single-device
+  top-k.  ``ingest_round`` / ``ingest_epoch`` receive the scan's final
+  state as a (possibly mesh-sharded) global array and adopt it
+  verbatim; host history replay is device-layout-agnostic.
 
 * **Host class** — :class:`Orchestrator` is a thin wrapper over the
   same functions (it literally calls them), kept for the eager
@@ -76,15 +84,26 @@ def ucb_advantage(state: dict) -> jnp.ndarray:
     return state["l_disc"] / s + jnp.sqrt(2.0 * jnp.log(t) / s)
 
 
-def ucb_select(state: dict, k: int, key) -> jnp.ndarray:
-    """Top-k client ids by advantage, sorted ascending; ties broken by
-    keyed jitter.  Pure: same (state, key) -> same selection, on host
-    or inside a scan."""
-    a = ucb_advantage(state)
+def ucb_select_from_advantage(a: jnp.ndarray, k: int, key) -> jnp.ndarray:
+    """Top-k client ids from a FULL (N,) advantage vector, sorted
+    ascending; ties broken by keyed jitter.  This is the replicated half
+    of selection under cohort sharding: each shard computes
+    ``ucb_advantage`` on its local (N/ndev,) state slice, all-gathers
+    the per-shard advantages back to (N,), and runs this top-k
+    replicated — the gathered vector is elementwise identical to the
+    single-device ``ucb_advantage``, so selections stay bit-identical
+    across device counts."""
     scale = _JITTER * (1.0 + jnp.max(jnp.abs(a)))
     jitter = jax.random.uniform(key, a.shape, jnp.float32, 0.0, 1.0)
     _, idx = jax.lax.top_k(a + jitter * scale, k)
     return jnp.sort(idx)
+
+
+def ucb_select(state: dict, k: int, key) -> jnp.ndarray:
+    """Top-k client ids by advantage, sorted ascending; ties broken by
+    keyed jitter.  Pure: same (state, key) -> same selection, on host
+    or inside a scan."""
+    return ucb_select_from_advantage(ucb_advantage(state), k, key)
 
 
 def ucb_update(state: dict, sel_mask, losses, *, gamma: float) -> dict:

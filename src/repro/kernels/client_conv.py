@@ -35,6 +35,14 @@ accept unstacked weights (K, K, Cin, Cout) — a single conv, still a
 GEMM — or stacked (C, K, K, Cin, Cout) with inputs (C, B, H, W, Cin);
 under a client ``vmap`` the unstacked form is traced and the batching
 transform produces exactly the stacked contraction.
+
+The leading C is whatever client axis reaches this kernel: the full
+cohort on one device, or — under ``shard_clients`` cohort sharding —
+the ``shard_map``-local C/ndev slice, where each device runs its own
+(C/ndev, B*H*W, K*K*Cin) panel batch.  Per-client results are
+independent (the GEMM's K-reduction runs per panel), so sharding the
+panel batch never changes the contraction — only backend blocking
+choices at different batch widths can perturb the last float bit.
 """
 from __future__ import annotations
 

@@ -28,3 +28,14 @@ def make_host_mesh():
     the CPU-container execution mesh for examples and smoke tests."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_cohort_mesh(n_devices: int | None = None):
+    """1-D ``(data,)`` mesh for cohort-sharded AdaSplit training
+    (``shard_clients=True``): the stacked client axis C is partitioned
+    across these devices, C/ndev clients per shard.  On CI / laptops the
+    devices are emulated host CPUs
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``); on a real
+    box they are the accelerators."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -14,6 +14,12 @@ aware) the stacked conv lowers to ONE batched GEMM instead of the
 group-serial feature-group conv, in forward and backward alike.  The
 ``lax.conv_general_dilated`` path (``batched_conv=False``) stays as the
 differential-test reference.
+
+The stacked client axis C here is LOGICAL, not global: under cohort
+sharding (``AdaSplitHParams.shard_clients``) these forwards trace
+inside a ``shard_map`` over the mesh's ``data`` axis and C is the
+shard-local C/ndev — each device batches its own slice of the filter
+panels through one GEMM, no cross-device traffic inside the tower.
 """
 from __future__ import annotations
 

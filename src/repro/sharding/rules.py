@@ -281,3 +281,35 @@ def batch_spec(ax: MeshAxes, ndim: int, *, batch_dim: int = 0):
     spec = [None] * ndim
     spec[batch_dim] = ax.data_spec
     return P(*spec)
+
+
+def cohort_pspecs(tree, ax: MeshAxes, *, cohort_size: Optional[int] = None):
+    """Leading-cohort-dim specs for any stacked per-client pytree (the
+    vision path's client params / proj heads / Adam moments / masks /
+    UCB state alike): every array leaf whose leading dim is the cohort
+    axis gets ``P(data, None, ...)``; scalar leaves (e.g. the UCB
+    ``t`` counter) and leaves whose leading dim is NOT divisible by the
+    data axes fall back to replication — the same must-always-lower
+    fallback as the model rules.
+
+    ``cohort_size``: when given, only leaves whose dim 0 equals it are
+    candidates (guards mixed pytrees where some leaves carry no cohort
+    dim); when None, any leading dim divisible by ``ax.data_size``
+    shards.
+    """
+    def one(leaf):
+        shape = getattr(leaf, "shape", ())
+        if (not ax.data or ax.data_size <= 1 or len(shape) == 0
+                or (cohort_size is not None and shape[0] != cohort_size)
+                or not _div(shape[0], ax.data_size)):
+            return P()
+        return P(*([ax.data_spec] + [None] * (len(shape) - 1)))
+    return jax.tree.map(one, tree)
+
+
+def staged_cohort_spec(ax: MeshAxes, ndim: int, *, cohort_dim: int = 1):
+    """Spec for staged round/epoch data: (T, C, B, ...) with
+    ``cohort_dim=1`` (per-round staging) or (R, T, C, B, ...) with
+    ``cohort_dim=2`` (epoch chunks) — the cohort axis on ``data``,
+    everything else replicated."""
+    return batch_spec(ax, ndim, batch_dim=cohort_dim)

@@ -123,7 +123,10 @@ def test_train_state_spec_tree_matches_state():
 def test_build_step_lowers_on_host_mesh(kind):
     cfg = get_config("olmo-1b").reduced()
     mesh = make_host_mesh()
-    shape = InputShape("t", 64, 4, kind)
+    # batch must divide across the data axis — the host mesh spans
+    # however many devices exist (8 in the multi-device CI lane)
+    batch = max(4, 2 * mesh.shape["data"])
+    shape = InputShape("t", 64, batch, kind)
     with mesh:
         fn, args = build_step(cfg, mesh, shape,
                               LaunchPolicy(fsdp=False, microbatch=1,
@@ -244,3 +247,112 @@ def test_optimized_shardings_numerically_consistent_subprocess():
     r = subprocess.run([sys.executable, "-c", NUMERICS_SUBPROC],
                        capture_output=True, text=True, timeout=1200)
     assert "NUMERICS-OK" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# cohort (vision-pytree) rules: leading-C sharding + divisibility fallback
+# ---------------------------------------------------------------------------
+
+
+def _vision_cohort_tree(n):
+    import jax.numpy as jnp
+    from repro.core.orchestrator import ucb_init
+    return {
+        "client": {"blocks": [{"w": jnp.zeros((n, 5, 5, 3, 6)),
+                               "b": jnp.zeros((n, 6))}]},
+        "proj": {"w1": jnp.zeros((n, 256, 128)), "b1": jnp.zeros((n, 128))},
+        "masks": {"blocks": [jnp.zeros((n, 16))],
+                  "fc1": jnp.zeros((n, 120))},
+        "step": jnp.zeros((n,), jnp.int32),
+        "ucb": ucb_init(n),
+    }
+
+
+def test_cohort_pspecs_vision_tree():
+    from repro.sharding.rules import cohort_pspecs
+    ax = MeshAxes(model=None, data=("data",), model_size=1, data_size=8)
+    tree = _vision_cohort_tree(32)
+    specs = cohort_pspecs(tree, ax, cohort_size=32)
+    # every leading-C leaf sharded on data, trailing dims replicated
+    w = specs["client"]["blocks"][0]["w"]
+    assert w[0] == "data" and all(s is None for s in w[1:])
+    assert specs["step"][0] == "data"
+    assert specs["ucb"]["l_disc"][0] == "data"
+    # the scalar UCB counter replicates
+    assert specs["ucb"]["t"] == P()
+
+
+def test_cohort_pspecs_divisibility_fallback():
+    from repro.sharding.rules import cohort_pspecs
+    ax = MeshAxes(model=None, data=("data",), model_size=1, data_size=8)
+    # 12 % 8 != 0 -> every leaf replicated (must-always-lower fallback)
+    specs = cohort_pspecs(_vision_cohort_tree(12), ax, cohort_size=12)
+    assert all(s == P() for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+    # cohort_size guard: leaves whose dim 0 is NOT the cohort replicate
+    mixed = {"coh": jnp.zeros((8, 4)), "other": jnp.zeros((4, 8))}
+    specs = cohort_pspecs(mixed, ax, cohort_size=8)
+    assert specs["coh"][0] == "data" and specs["other"] == P()
+    # 1-device mesh: everything replicated
+    ax1 = MeshAxes(model=None, data=("data",), model_size=1, data_size=1)
+    specs = cohort_pspecs(_vision_cohort_tree(8), ax1, cohort_size=8)
+    assert all(s == P() for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+
+
+@pytest.mark.parametrize("ndev", [1, 2, 8])
+def test_mesh_axes_from_mesh_device_counts(ndev):
+    """MeshAxes.from_mesh over 1/2/8-device cohort meshes (AbstractMesh:
+    no real devices needed — shape/axis metadata only)."""
+    from jax.sharding import AbstractMesh
+    ax = MeshAxes.from_mesh(AbstractMesh((("data", ndev),)))
+    assert ax.data == ("data",) and ax.data_size == ndev
+    assert ax.model is None and ax.model_size == 1
+    assert ax.data_spec == "data"
+    ax2 = MeshAxes.from_mesh(AbstractMesh((("data", ndev), ("model", 2))))
+    assert ax2.data_size == ndev and ax2.model_size == 2
+
+
+def test_staged_cohort_spec():
+    from repro.sharding.rules import staged_cohort_spec
+    ax = MeshAxes(model=None, data=("data",), model_size=1, data_size=8)
+    assert staged_cohort_spec(ax, 6, cohort_dim=1) == P(None, "data",
+                                                        *[None] * 4)
+    assert staged_cohort_spec(ax, 7, cohort_dim=2) == P(None, None,
+                                                        "data",
+                                                        *[None] * 4)
+
+
+def test_ucb_select_from_advantage_is_select():
+    """The replicated half of sharded selection: feeding the full
+    advantage vector through ``ucb_select_from_advantage`` IS
+    ``ucb_select`` (hypothesis over random UCB states)."""
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis "
+        "(pip install -r requirements-dev.txt)")
+    from hypothesis import given, settings, strategies as st
+    from repro.core.orchestrator import (ucb_advantage, ucb_init,
+                                         ucb_select,
+                                         ucb_select_from_advantage,
+                                         ucb_update)
+    import numpy as np
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(4, 24),
+           st.data())
+    def prop(seed, n, data):
+        rng = np.random.default_rng(seed)
+        state = ucb_init(n)
+        for _ in range(data.draw(st.integers(0, 3))):
+            mask = (rng.random(n) < 0.5).astype(np.float32)
+            state = ucb_update(state, jnp.asarray(mask),
+                               jnp.asarray(rng.random(n, np.float32) * 10),
+                               gamma=0.87)
+        k = data.draw(st.integers(1, n))
+        key = jax.random.PRNGKey(seed)
+        np.testing.assert_array_equal(
+            np.asarray(ucb_select(state, k, key)),
+            np.asarray(ucb_select_from_advantage(
+                ucb_advantage(state), k, key)))
+
+    prop()
