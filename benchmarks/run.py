@@ -7,7 +7,8 @@ Sections: epoch_scan (epoch-resident rounds vs per-round dispatch),
 round_scan (device-resident rounds vs eager driver), global_phase
 (batched vs sequential global phase), table1 table2 (comparisons),
 table3..table6 (sensitivity), fig1 (trade-off curve), kernels
-(microbench), roofline (if dry-run artifacts exist).
+(microbench), serve_traffic (continuous-batching serving vs the FIFO
+oracle on a Poisson trace), roofline (if dry-run artifacts exist).
 
 Each section's tables are flushed to a machine-readable
 ``BENCH_<section>.json`` (benchmarks.common.write_bench_json), and the
@@ -34,7 +35,8 @@ def main() -> None:
     t0 = time.time()
 
     from benchmarks import ablation_masks, comparison, epoch_scan, \
-        fig1_tradeoff, global_phase, kernel_bench, round_scan, sensitivity
+        fig1_tradeoff, global_phase, kernel_bench, round_scan, \
+        sensitivity, serve_traffic
     from benchmarks.common import write_bench_json
 
     sections = [
@@ -50,6 +52,7 @@ def main() -> None:
         ("fig1", fig1_tradeoff.main),
         ("ablation_masks", ablation_masks.main),
         ("kernels", kernel_bench.main),
+        ("serve_traffic", serve_traffic.main),
     ]
     written, failed = [], []
     for name, fn in sections:

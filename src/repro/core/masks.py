@@ -134,6 +134,27 @@ def stack_client_gates(per_client_gates):
             for seg in zip(*per_client_gates)]
 
 
+def init_slot_gates(masks: List[Any], n_slots: int):
+    """All-ones per-slot gate stack (leaves (n_rep, B, U)) for a
+    continuous-batching engine: a free slot decodes through the unmasked
+    server (its output is never read), an occupied slot carries its
+    client's gates written in by :func:`set_slot_gates`."""
+    return [jax.tree.map(
+        lambda l: jnp.ones((l.shape[1], n_slots) + l.shape[2:], l.dtype),
+        seg) for seg in masks]
+
+
+def set_slot_gates(slot_gates, slot, client_gates):
+    """Write one client's gate pytree (leaves (n_rep, U)) into column
+    ``slot`` of the per-slot stack (leaves (n_rep, B, U)).  ``slot`` may
+    be a traced int32 scalar (one jitted admission fn serves every
+    slot)."""
+    return [jax.tree.map(
+        lambda s, c: jax.lax.dynamic_update_slice_in_dim(
+            s, c[:, None].astype(s.dtype), slot, axis=1), ss, cs)
+        for ss, cs in zip(slot_gates, client_gates)]
+
+
 # ---------------------------------------------------------------------------
 # per-scalar masks (paper-faithful)
 # ---------------------------------------------------------------------------

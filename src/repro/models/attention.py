@@ -178,10 +178,15 @@ def _head_gate(out, gate, dtype):
 
 def attn_forward(p, x, cfg, *, positions, causal=True, window=0,
                  chunked=None, kv_override=None, head_gate=None,
-                 qkv_shard=None, out_shard=None):
+                 qkv_shard=None, out_shard=None, kv_valid=None):
     """Full-sequence attention (train / prefill / encoder).
 
     kv_override: (k, v) already projected — used for cross-attention.
+    kv_valid: optional (B, S) bool key-validity mask for ragged batches —
+    padded key positions contribute nothing to ANY query (serving
+    right-pads ragged prompts; causality already protects real queries
+    from trailing pads, the mask makes the invariance explicit and
+    covers non-causal uses).  Forces the einsum path.
     head_gate: AdaSplit structured mask, (H,) or (B, H), gating each
     attention head's output before the wo projection (masking a head's
     slice of wo's input = masking that head's parameters, eq. 7).
@@ -219,7 +224,10 @@ def attn_forward(p, x, cfg, *, positions, causal=True, window=0,
         v = jax.lax.with_sharding_constraint(v, kvs)
     if chunked is None:
         chunked = S > 2048
-    if chunked and S % 256 == 0:
+    if kv_valid is not None:
+        out = mha_einsum(q, k, v, causal=causal, window=window,
+                         kv_valid=kv_valid)
+    elif chunked and S % 256 == 0:
         out = mha_chunked(q, k, v, causal=causal, window=window,
                           q_chunk=min(1024, S), kv_chunk=min(1024, k.shape[1]))
     else:
@@ -245,7 +253,14 @@ def init_kv_cache(cfg, batch, length, dtype):
 
 def attn_decode(p, x, cache, pos, cfg, *, window=0, kv_override=None,
                 head_gate=None):
-    """One-token decode.  x: (B, 1, D); pos: scalar int32 (same for batch).
+    """One-token decode.  x: (B, 1, D).
+
+    pos is either a scalar int32 (whole batch at the same position — the
+    training-adjacent path, bit-identical to the seed) or a (B,) int32
+    vector of PER-SLOT positions for continuous-batching serving: each
+    row writes its K/V at its own cache slot and only keys at
+    ``idx <= pos[b]`` (its own prompt + generated prefix) are attended —
+    empty slots and right-pad keys contribute nothing.
 
     With ``window`` the cache is a ring buffer of that length.
     Returns (out, new_cache).
@@ -265,27 +280,39 @@ def attn_decode(p, x, cache, pos, cfg, *, window=0, kv_override=None,
         return out @ p["wo"].astype(dtype), cache
 
     q, k, v = _project_qkv(p, x, cfg, dtype)
-    posb = jnp.broadcast_to(pos[None, None] if pos.ndim == 0 else pos,
-                            (B, 1))
+    posb = pos.reshape(B, 1) if pos.ndim else \
+        jnp.broadcast_to(pos[None, None], (B, 1))
     if cfg.mrope_sections:
         posb3 = jnp.broadcast_to(posb[..., None], (B, 1, 3))
         q, k = _rope_qk(q, k, cfg, posb3)
     else:
         q, k = _rope_qk(q, k, cfg, posb)
     L = cache["k"].shape[1]
-    slot = (pos % L) if window else jnp.minimum(pos, L - 1)
-    k_all = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                         (0, slot, 0, 0))
-    v_all = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                         (0, slot, 0, 0))
     idx = jnp.arange(L)
-    if window:
-        valid = idx < jnp.minimum(pos + 1, L)  # ring: all valid once full
-        # relative recency works without unrolling the ring because softmax
-        # is permutation-invariant over kv slots; mask alone suffices.
+    if pos.ndim:                          # per-slot positions (B,)
+        posv = posb[:, 0]
+        slot = (posv % L) if window else jnp.minimum(posv, L - 1)
+        bidx = jnp.arange(B)
+        k_all = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+        v_all = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        if window:
+            kv_valid = idx[None, :] < jnp.minimum(posv + 1, L)[:, None]
+        else:
+            kv_valid = idx[None, :] <= posv[:, None]
     else:
-        valid = idx <= pos
-    kv_valid = jnp.broadcast_to(valid[None, :], (B, L))
+        slot = (pos % L) if window else jnp.minimum(pos, L - 1)
+        k_all = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        if window:
+            valid = idx < jnp.minimum(pos + 1, L)  # ring: all valid once full
+            # relative recency works without unrolling the ring because
+            # softmax is permutation-invariant over kv slots; mask alone
+            # suffices.
+        else:
+            valid = idx <= pos
+        kv_valid = jnp.broadcast_to(valid[None, :], (B, L))
     out = mha_einsum(q, k_all, v_all, causal=False, kv_valid=kv_valid)
     out = _head_gate(out, head_gate, dtype)
     out = out.reshape(B, 1, hq * hd)

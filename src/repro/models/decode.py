@@ -87,8 +87,14 @@ def _ring_arrange(k_full, window, cache_len):
 
 def run_segments_prefill(cfg, segments, seg_params, x, *, positions,
                          window=0, gates=None, cross=None, chunked=None,
-                         cache_len=0, qkv_shard=None, attn_out_shard=None):
-    """Like run_segments but also emits per-layer caches."""
+                         cache_len=0, qkv_shard=None, attn_out_shard=None,
+                         kv_valid=None):
+    """Like run_segments but also emits per-layer caches.
+
+    kv_valid: optional (B, S) key-validity mask for ragged right-padded
+    prompts, applied to every SELF-attention (never cross-attention,
+    whose key space is the encoder output).
+    """
     aux_total = jnp.zeros((), jnp.float32)
     caches = []
     dtype = x.dtype
@@ -109,7 +115,8 @@ def run_segments_prefill(cfg, segments, seg_params, x, *, positions,
                         p["mixer"], h, cfg, positions=positions,
                         causal=desc.causal, window=window, chunked=chunked,
                         qkv_shard=qkv_shard, out_shard=attn_out_shard,
-                        head_gate=_gate_or_none(g, "mixer"))
+                        head_gate=_gate_or_none(g, "mixer"),
+                        kv_valid=kv_valid)
                     c["mixer"] = {"k": _ring_arrange(k, window, cache_len),
                                   "v": _ring_arrange(v, window, cache_len)}
                 else:
@@ -161,7 +168,7 @@ def run_segments_prefill(cfg, segments, seg_params, x, *, positions,
 
 def prefill(cfg: ModelConfig, params, tokens, extras=None, *, gates=None,
             window: int = 0, dtype=None, chunked=None, cache_len: int = 0,
-            qkv_shard=None, attn_out_shard=None):
+            qkv_shard=None, attn_out_shard=None, last_index=None):
     """Build cache from a prompt.  Returns (last_logits, cache).
 
     gates: optional per-server-segment AdaSplit masks — leaves either
@@ -169,6 +176,14 @@ def prefill(cfg: ModelConfig, params, tokens, extras=None, *, gates=None,
     per-example (``masks.expand_gates`` / ``masks.stack_client_gates``)
     so a single batch can serve MIXED clients, each example gated by
     its own client's mask.
+
+    last_index: optional (B,) int32 index of each example's LAST REAL
+    token for ragged right-padded prompt batches — the returned logits
+    are taken at each example's own last token (not the padded tail),
+    and keys past ``last_index`` are masked out of every self-attention
+    (``kv_valid``) so pad tokens contribute nothing.  With it, a ragged
+    batch prefill is equivalent to prefilling each prompt alone.
+    Decoder-only archs only.
     """
     dtype = dtype or jnp.dtype(cfg.dtype)
     plan = model_plan(cfg)
@@ -197,20 +212,56 @@ def prefill(cfg: ModelConfig, params, tokens, extras=None, *, gates=None,
     positions = _positions_for(cfg, tokens, extras)
     x = _client_inputs(cfg, pc, tokens, extras, dtype)
     cache_len = cache_len or tokens.shape[1] + 64
+    kv_valid = None
+    if last_index is not None:
+        kv_valid = jnp.arange(tokens.shape[1])[None, :] <= last_index[:, None]
     x, _, c_caches = run_segments_prefill(
         cfg, plan["client_segments"], pc["segments"], x,
         positions=positions, window=window, chunked=chunked,
         cache_len=cache_len, qkv_shard=qkv_shard,
-        attn_out_shard=attn_out_shard)
+        attn_out_shard=attn_out_shard, kv_valid=kv_valid)
     x, _, s_caches = run_segments_prefill(
         cfg, plan["server_segments"], ps["segments"], x,
         positions=positions, window=window, gates=gates, chunked=chunked,
         cache_len=cache_len, qkv_shard=qkv_shard,
-        attn_out_shard=attn_out_shard)
+        attn_out_shard=attn_out_shard, kv_valid=kv_valid)
     x = apply_norm(ps["final_norm"], x, cfg.norm)
-    logits = unembed(ps["lm_head"], x[:, -1:])
+    x_last = x[:, -1:] if last_index is None else \
+        x[jnp.arange(x.shape[0]), last_index][:, None]
+    logits = unembed(ps["lm_head"], x_last)
     logits = logits + vocab_pad_bias(cfg.vocab_size, cfg.padded_vocab())
     return logits, {"client": c_caches, "server": s_caches}
+
+
+# ---------------------------------------------------------------------------
+# Per-slot cache surgery (continuous-batching serving)
+# ---------------------------------------------------------------------------
+
+
+def slot_serving_ok(cfg: ModelConfig) -> bool:
+    """Whether the arch supports per-slot continuous batching: decoder-only
+    attention stacks.  SSM mixers fold right-pad tokens into their state
+    irreversibly and enc-dec decoders have no ragged prompt axis."""
+    if cfg.is_encoder_decoder or cfg.is_conv:
+        return False
+    plan = model_plan(cfg)
+    return all(d.mixer == "attn"
+               for seg in plan["client_segments"] + plan["server_segments"]
+               for d in seg.body)
+
+
+def merge_slot_cache(batch_cache, one_cache, slot):
+    """Write a single-request cache (leaves (n_rep, 1, ...)) into row
+    ``slot`` of the persistent batch cache (leaves (n_rep, B, ...)).
+
+    This is the admission step of the continuous-batching engine: a
+    freed slot's KV ring is overwritten by the next request's prefill
+    cache.  ``slot`` may be a traced int32 scalar, so one jitted merge
+    serves every slot index without retracing."""
+    return jax.tree.map(
+        lambda b, s: jax.lax.dynamic_update_slice_in_dim(
+            b, s.astype(b.dtype), slot, axis=1),
+        batch_cache, one_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -222,7 +273,10 @@ def decode_step(cfg: ModelConfig, params, token, cache, pos, *, gates=None,
                 window: int = 0, dtype=None):
     """One token for the whole (composed) model.
 
-    token: (B, 1) int32; pos: scalar int32 current position.
+    token: (B, 1) int32; pos: scalar int32 current position, or a (B,)
+    int32 vector of PER-SLOT positions (continuous-batching serving:
+    every slot decodes at its own context length, see
+    :func:`repro.models.attention.attn_decode`).
     gates apply to the server segments only (AdaSplit per-client
     masks); as in :func:`prefill`, leaves may carry a per-example B
     axis for mixed-client serving batches.

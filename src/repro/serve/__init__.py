@@ -1,1 +1,4 @@
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import EngineStats, Request, ServeEngine
+from repro.serve.continuous import ContinuousEngine
+from repro.serve.lru import ShardedLRU
+from repro.serve.scheduler import SlotScheduler

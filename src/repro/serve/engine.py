@@ -1,30 +1,43 @@
-"""Personalized batched serving engine.
+"""Personalized serving: shared request/stats types + the FIFO oracle.
 
 The AdaSplit inference story (§3.3) at service level: many clients, one
 shared server parameter store, each client served through its own
-folded ``M^s * m_i``.  The engine:
+folded ``M^s * m_i``.  The serving layer follows the repo's ladder
+convention — an eager reference and a compiled fast path pinned
+together by differential tests:
 
-* keeps an LRU cache of mask-folded server weights (folding is paid
-  once per client session, not per token — DESIGN.md §4);
-* groups queued requests into decode batches.  Two policies:
-  - ``mixed_batches=False`` (seed behaviour): batch BY CLIENT — the
-    FIFO head's client and every queued request of that client share
-    one folded effective model;
-  - ``mixed_batches=True``: take the FIFO head-of-line requests of ANY
-    client, stack each request's per-unit gates into per-example gates
-    (leaves (n_rep, B, U), ``masks.stack_client_gates``) and run ONE
-    gate-batched server forward for the whole batch.  Activation-space
-    gating is mathematically the folded model applied per example, so
-    heterogeneous clients batch without weight duplication.  Per-client
-    gate pytrees are LRU-cached (gathered + binarized once per session,
-    reused for every batch that contains the client);
-* pads prompts to a shared length per batch, prefils once, then decodes
-  step-by-step with per-request stop handling.  The decode step is
-  jitted ONCE per engine (not per batch), so steady-state batches pay
-  zero retrace.
+* ``ServeEngine`` (this module) is the REFERENCE: a blocking FIFO
+  engine whose ``run_until_idle`` drains the queue in head-of-line
+  batches.  It is kept deliberately simple — batched prefill runs
+  eagerly, a finished request's row keeps computing until the batch max
+  budget — but it is CORRECT for ragged traffic: prompts are
+  RIGHT-padded and each example's last-token logits / decode positions
+  are per-example (``last_index`` + per-slot ``pos`` vectors through
+  ``models.decode`` / ``models.attention``), so a mixed ragged-prompt
+  batch decodes the same tokens as serving each request alone.  Each
+  request stops being BILLED at its own budget and its latency is
+  admission→completion of ITS last token, not whole-batch wall time.
 
-This is the framework's serving layer; ``examples/personalized_serving``
-shows the single-session path, tests cover scheduling invariants.
+* ``serve.continuous.ContinuousEngine`` is the fast path: per-slot
+  admission into a persistent decode batch (a finished request frees
+  its slot; the next queued request prefills into it mid-flight),
+  per-slot KV rings, per-request stop, and a sharded per-client gate
+  LRU.  ``benchmarks/serve_traffic.py`` measures both on the same
+  Poisson trace.
+
+Both engines share two per-client LRU caches (``serve.lru``):
+mask-folded server weights (single-client batches; folding paid once
+per session, DESIGN.md §4) and binarized per-unit gate pytrees (mixed
+batches: stacked into per-example gates, ``masks.stack_client_gates``,
+one gate-batched forward serves heterogeneous clients).
+
+Accounting (``EngineStats``): ``tokens`` counts tokens actually
+DECODED for live requests (in the FIFO engine this includes the
+over-decode past a request's own budget — that waste is the point of
+measuring it), ``completed`` counts tokens delivered within budgets;
+``tokens_per_s`` / ``completed_per_s`` are work rate vs goodput, and
+``occupancy`` is the mean fraction of decode-batch rows doing useful
+work per step.
 """
 from __future__ import annotations
 
@@ -40,6 +53,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import masks as masks_mod
 from repro.models import decode as dec
+from repro.serve.lru import ShardedLRU
 
 
 @dataclass
@@ -50,14 +64,21 @@ class Request:
     max_new_tokens: int = 16
     # filled by the engine:
     output: Optional[np.ndarray] = None
-    latency_s: float = 0.0
+    latency_s: float = 0.0          # admission -> completion of ITS last token
+    t_submit: float = 0.0           # wall clock at submit()
+    t_admit: float = 0.0            # wall clock at admission into a batch/slot
+    t_done: float = 0.0             # wall clock at completion
 
 
 @dataclass
 class EngineStats:
     requests: int = 0
-    tokens: int = 0
+    tokens: int = 0                 # tokens decoded for live requests (work)
+    completed: int = 0              # tokens delivered within request budgets
     batches: int = 0
+    decode_steps: int = 0           # jitted decode-step dispatches
+    slot_steps: int = 0             # sum over steps of useful (in-budget) rows
+    slot_capacity: int = 0          # decode batch width (set by the engine)
     mixed_batches: int = 0          # batches spanning >1 client
     fold_hits: int = 0
     fold_misses: int = 0
@@ -67,14 +88,32 @@ class EngineStats:
 
     @property
     def tokens_per_s(self):
+        """Decode WORK rate — includes FIFO over-decode waste."""
         return self.tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def completed_per_s(self):
+        """Goodput: tokens delivered within budgets per second."""
+        return self.completed / max(self.wall_s, 1e-9)
 
     @property
     def mean_batch_occupancy(self):
         return self.requests / max(self.batches, 1)
 
+    @property
+    def occupancy(self):
+        """Mean fraction of decode-batch rows doing useful work."""
+        denom = self.decode_steps * max(self.slot_capacity, 1)
+        return self.slot_steps / max(denom, 1)
+
+
+def _ragged_ok(cfg: ModelConfig) -> bool:
+    return dec.slot_serving_ok(cfg)
+
 
 class ServeEngine:
+    """Blocking FIFO reference engine (the serving ladder's oracle)."""
+
     def __init__(self, cfg: ModelConfig, params, masks=None, *,
                  max_batch: int = 8, fold_cache_size: int = 4,
                  window: int = 0, binarize_threshold: float = 0.0,
@@ -85,52 +124,45 @@ class ServeEngine:
         self.binarize_threshold = binarize_threshold
         self.mixed_batches = mixed_batches
         self.queue: collections.deque = collections.deque()
-        self.stats = EngineStats()
-        self._fold_cache: "collections.OrderedDict[int, dict]" = \
-            collections.OrderedDict()
-        self._gate_cache: "collections.OrderedDict[int, list]" = \
-            collections.OrderedDict()
-        self._fold_cache_size = fold_cache_size
+        self.stats = EngineStats(slot_capacity=max_batch)
+        # exact (single-shard) LRUs: the oracle's behaviour must be the
+        # plain textbook one the differential tests pin against
+        self._fold_cache = ShardedLRU(fold_cache_size, n_shards=1)
         # a mixed batch can touch up to max_batch distinct clients per
         # step — size the gate cache so a steady rotation still hits
-        self._gate_cache_size = max(fold_cache_size, max_batch)
+        self._gate_cache = ShardedLRU(max(fold_cache_size, max_batch),
+                                      n_shards=1)
         self._step = jax.jit(self._step_fn)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        req.t_submit = req.t_submit or time.time()
         self.queue.append(req)
 
     def _server_for(self, client_id: int):
         """Mask-folded server weights, LRU-cached per client."""
         if self.masks is None:
             return self.params["server"]
-        if client_id in self._fold_cache:
-            self.stats.fold_hits += 1
-            self._fold_cache.move_to_end(client_id)
-            return self._fold_cache[client_id]
-        self.stats.fold_misses += 1
-        folded = masks_mod.fold_unit_masks(
-            self.cfg, self.params["server"], self.masks, client_id,
-            threshold=self.binarize_threshold)
-        self._fold_cache[client_id] = folded
-        if len(self._fold_cache) > self._fold_cache_size:
-            self._fold_cache.popitem(last=False)
+        folded = self._fold_cache.get_or_add(
+            client_id,
+            lambda: masks_mod.fold_unit_masks(
+                self.cfg, self.params["server"], self.masks, client_id,
+                threshold=self.binarize_threshold))
+        self.stats.fold_hits = self._fold_cache.hits
+        self.stats.fold_misses = self._fold_cache.misses
         return folded
 
     def _gates_for(self, client_id: int):
         """One client's per-unit gate pytree (leaves (n_rep, U)),
         binarized per the engine threshold, LRU-cached."""
-        if client_id in self._gate_cache:
-            self.stats.gate_hits += 1
-            self._gate_cache.move_to_end(client_id)
-            return self._gate_cache[client_id]
-        self.stats.gate_misses += 1
-        g = masks_mod.gates_for_client(self.masks, client_id)
-        if self.binarize_threshold > 0:
-            g = masks_mod.binarize(g, self.binarize_threshold)
-        self._gate_cache[client_id] = g
-        if len(self._gate_cache) > self._gate_cache_size:
-            self._gate_cache.popitem(last=False)
+        def build():
+            g = masks_mod.gates_for_client(self.masks, client_id)
+            if self.binarize_threshold > 0:
+                g = masks_mod.binarize(g, self.binarize_threshold)
+            return g
+        g = self._gate_cache.get_or_add(client_id, build)
+        self.stats.gate_hits = self._gate_cache.hits
+        self.stats.gate_misses = self._gate_cache.misses
         return g
 
     def _next_batch(self) -> List[Request]:
@@ -179,38 +211,84 @@ class ServeEngine:
 
     def _run_batch(self, batch: List[Request]):
         cfg = self.cfg
+        lens = np.array([len(r.prompt) for r in batch], np.int32)
+        if len(set(lens.tolist())) > 1 and not _ragged_ok(cfg):
+            # ssm / enc-dec stacks can't mask pad state: fall back to
+            # exact equal-length sub-batches (correctness over batching)
+            done = []
+            by_len: Dict[int, List[Request]] = {}
+            for r in batch:
+                by_len.setdefault(len(r.prompt), []).append(r)
+            for sub in by_len.values():
+                done.extend(self._run_batch(sub))
+            return done
+
         t0 = time.time()
+        for r in batch:
+            r.t_admit = t0
         params, gates = self._batch_model(batch)
-        plen = max(len(r.prompt) for r in batch)
+        plen = int(lens.max())
         gen = max(r.max_new_tokens for r in batch)
-        prompts = np.zeros((len(batch), plen), np.int32)
-        for i, r in enumerate(batch):          # left-pad with token 0
-            prompts[i, plen - len(r.prompt):] = r.prompt
-        prompts = jnp.asarray(prompts)
+        ragged = bool((lens != plen).any())
+        prompts_np = np.zeros((len(batch), plen), np.int32)
+        for i, r in enumerate(batch):
+            # RIGHT-pad: causal attention never reaches forward into the
+            # pad keys, and `last_index`/`kv_valid` take each example's
+            # logits at ITS last real token — a ragged batch decodes the
+            # same tokens as serving each request alone (the seed's
+            # LEFT-pad let short prompts attend to pad keys).
+            prompts_np[i, : lens[i]] = r.prompt
+        prompts = jnp.asarray(prompts_np)
 
         cache_len = plen + gen + 1
         extras = None
         if cfg.is_encoder_decoder:
             extras = {"src_embeds": jnp.zeros(
                 (len(batch), plen, cfg.d_model), jnp.bfloat16)}
+        last_index = jnp.asarray(lens - 1) if ragged else None
         logits, cache = dec.prefill(cfg, params, prompts, extras,
                                     window=self.window, gates=gates,
-                                    cache_len=cache_len)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+                                    cache_len=cache_len,
+                                    last_index=last_index)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         outs = [tok]
 
+        # per-request stop: request r has ITS r.max_new_tokens tokens
+        # after decode step r.max_new_tokens - 2 (prefill produced the
+        # first); record ITS completion time there.  The batch still
+        # runs to the max budget (a static batch cannot free a row — the
+        # continuous engine exists to fix that), but the over-decode is
+        # billed as work, never as completed tokens or latency.
+        due: Dict[int, List[Request]] = {}
+        for r in batch:
+            due.setdefault(r.max_new_tokens - 2, []).append(r)
+
+        def finish(step_idx, arr):
+            arr.block_until_ready()
+            tdone = time.time()
+            for r in due.get(step_idx, []):
+                r.t_done = tdone
+                r.latency_s = tdone - r.t_admit
+
+        finish(-1, tok)                     # budget-1 requests
         for t in range(gen - 1):
-            tok, cache = self._step(params, cache, tok,
-                                    jnp.asarray(plen + t, jnp.int32), gates)
+            pos = jnp.asarray(lens + t) if ragged \
+                else jnp.asarray(plen + t, jnp.int32)
+            tok, cache = self._step(params, cache, tok, pos, gates)
             outs.append(tok)
+            if t in due:
+                finish(t, tok)
         out = np.asarray(jnp.concatenate(outs, axis=1))
         dt = time.time() - t0
         for i, r in enumerate(batch):
             r.output = out[i, : r.max_new_tokens]
-            r.latency_s = dt
         self.stats.requests += len(batch)
-        self.stats.tokens += int(sum(r.max_new_tokens for r in batch))
+        self.stats.tokens += len(batch) * gen
+        self.stats.completed += int(sum(r.max_new_tokens for r in batch))
         self.stats.batches += 1
+        self.stats.decode_steps += gen - 1
+        self.stats.slot_steps += int(
+            sum(min(r.max_new_tokens, gen) - 1 for r in batch))
         if len({r.client_id for r in batch}) > 1:
             self.stats.mixed_batches += 1
         self.stats.wall_s += dt
