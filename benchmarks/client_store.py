@@ -1,0 +1,187 @@
+"""Streamed client-store residency (``streamed=True``) — memory scaling
+and round overhead vs the device-resident path.
+
+Two tables:
+
+* ``client_store stream_resident`` — per-round wall clock resident vs
+  streamed at N in {32, 256} (lite LeNet, min-of-reps), plus the peak
+  DEVICE-resident client-state bytes each strategy holds.  Resident
+  keeps the full (C, ...) stacked trees on device — O(C); streamed
+  holds two staging-ring chunks of params/opt rows during the client
+  pass and the S selected mask/opt rows during the global pass —
+  O(chunk) + O(S), independent of C.  Columns:
+
+    - ``stream_vs_resident_x`` = resident_ms / streamed_ms (ratio,
+      higher is better; acceptance: >= 1/1.3, i.e. streamed overhead
+      <= 1.3x resident at N=32 on CPU);
+    - ``mem_ratio_x`` = resident / streamed device client bytes
+      (grows linearly with C when chunk and S are fixed — the O(S)
+      vs O(C) acceptance).
+
+* ``client_store scale`` — a C = 10^4 population streamed through a
+  DiskStore on a shrunken config (8x8 images, (2,4) conv channels):
+  the memory-headline smoke row.  A resident run at this C would stack
+  ~GBs of client state on the device; the streamed run completes with
+  O(chunk)+O(S) residency and the table records its wall clock and
+  device-resident client bytes.
+
+  PYTHONPATH=src python -m benchmarks.client_store [--scale=smoke|std|paper]
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, lenet_cfg, scale, write_bench_json
+from repro.core.adasplit import AdaSplitHParams, AdaSplitTrainer
+from repro.core.client_store import tree_nbytes
+from repro.data.synthetic import ClientData, mixed_noniid
+
+T = 4                    # iterations per round
+REPS = 3
+CHUNK = 8                # streamed rows per device cohort (< C so the
+                         # mem ratio actually exercises the streaming)
+
+
+def lite_cfg():
+    return dataclasses.replace(lenet_cfg(), name="lenet-lite",
+                               conv_channels=(4, 8), d_model=32)
+
+
+def _mk(cfg, clients, batch, **hp_kw):
+    hp = AdaSplitHParams(rounds=1, kappa=0.0, eta=0.25, batch_size=batch,
+                         seed=0, **hp_kw)
+    return AdaSplitTrainer(cfg, hp, clients)
+
+
+def _iters(clients, batch):
+    return [[(c.x[t * batch:(t + 1) * batch],
+              c.y[t * batch:(t + 1) * batch]) for t in range(T)]
+            for c in clients]
+
+
+def _round_s(tr, iters, run):
+    run(tr, iters)                        # warmup: compile
+    jax.block_until_ready(tr.server_params)
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.time()
+        run(tr, iters)
+        jax.block_until_ready(tr.server_params)
+        best = min(best, time.time() - t0)
+    return best
+
+
+def _resident_client_bytes(tr) -> int:
+    """Device bytes of the resident stacked client state."""
+    return tree_nbytes({"cp": {"c": tr.client_params,
+                               "p": tr.proj_params},
+                        "co": tr.c_opt, "m": tr.masks, "mo": tr.m_opt})
+
+
+def _streamed_client_bytes(tr) -> int:
+    """Peak device-resident client rows under streaming: two staging-
+    ring chunks of params/opt rows (pass A) + the S selected mask/opt
+    rows (pass B) — independent of C."""
+    chunk, k = tr._stream_chunk, tr.orch.k
+    return (2 * chunk * tr.store.row_nbytes(("cp", "co"))
+            + k * tr.store.row_nbytes(("m", "mo")))
+
+
+def _stream_resident_table(sizes, accept_at=32):
+    cfg, batch = lite_cfg(), 4
+    rows = []
+    for n in sizes:
+        clients = mixed_noniid(n_clients=n, n_per_client=batch * T,
+                               n_test=8, seed=0)
+        iters = _iters(clients, batch)
+        res = _mk(cfg, clients, batch)
+        res_s = _round_s(res, iters,
+                         lambda tr, it: tr._run_round_scan(it, T, True))
+        stm = _mk(cfg, clients, batch, streamed=True, stream_chunk=CHUNK)
+        stm_s = _round_s(
+            stm, iters,
+            lambda tr, it: tr._run_round_streamed(it, T, True))
+        res_mb = _resident_client_bytes(res) / 1e6
+        stm_mb = _streamed_client_bytes(stm) / 1e6
+        ratio = res_s / max(stm_s, 1e-9)
+        mem_ratio = res_mb / max(stm_mb, 1e-9)
+        rows.append([n, f"{res_s * 1e3:.1f}", f"{stm_s * 1e3:.1f}",
+                     f"{ratio:.3f}", f"{res_mb:.3f}", f"{stm_mb:.3f}",
+                     f"{mem_ratio:.2f}"])
+        print(f"[N={n} B={batch} chunk={CHUNK}] round: resident "
+              f"{res_s*1e3:.1f}ms  streamed {stm_s*1e3:.1f}ms "
+              f"({stm_s/max(res_s,1e-9):.2f}x overhead)  |  device "
+              f"client bytes: resident {res_mb:.2f}MB  streamed "
+              f"{stm_mb:.2f}MB ({mem_ratio:.1f}x)")
+        if n == accept_at:
+            over = stm_s / max(res_s, 1e-9)
+            verdict = "PASS" if over <= 1.3 else "MISS"
+            print(f"acceptance (streamed overhead <= 1.3x resident at "
+                  f"N={accept_at} CPU): {verdict} ({over:.2f}x)")
+    # streamed bytes are C-independent, so mem_ratio_x must GROW
+    # linearly in C — that is the O(S) vs O(C) claim made measurable
+    emit(f"client_store stream_resident B={batch} T={T} chunk={CHUNK} "
+         "(ms/round + peak device-resident client-state bytes)",
+         rows, ["n_clients", "resident_ms", "streamed_ms",
+                "stream_vs_resident_x", "resident_client_mb",
+                "streamed_client_mb", "mem_ratio_x"])
+
+
+def _tiny_clients(n, n_per, img, seed=0):
+    """Minimal synthetic population for the C=10^4 smoke: tiny images
+    keep the HOST data footprint at ~n * n_per * img^2 * 12 bytes."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        x = rng.random((n_per, img, img, 3), np.float32)
+        y = rng.integers(0, 10, n_per).astype(np.int32)
+        out.append(ClientData(x, y, x[:1], y[:1], dataset_id=i % 5))
+    return out
+
+
+def _scale_table(n_clients):
+    cfg = dataclasses.replace(lenet_cfg(), name="lenet-micro",
+                              image_size=8, conv_channels=(2, 4),
+                              d_model=16)
+    batch, chunk = 2, 512
+    clients = _tiny_clients(n_clients, batch, cfg.image_size)
+    hp = AdaSplitHParams(rounds=1, kappa=0.0, eta=0.01, batch_size=batch,
+                         proj_dim=8, seed=0, streamed=True,
+                         store_backend="disk", stream_chunk=chunk)
+    t0 = time.time()
+    tr = AdaSplitTrainer(cfg, hp, clients)
+    init_s = time.time() - t0
+    t0 = time.time()
+    tr.train(eval_every=10**6)            # 1 round, no eval
+    round_s = time.time() - t0
+    stm_mb = _streamed_client_bytes(tr) / 1e6
+    store_mb = tr.store.nbytes() / 1e6
+    print(f"[C={n_clients} disk-streamed] init {init_s:.1f}s  round "
+          f"{round_s:.1f}s  |  store {store_mb:.0f}MB on disk, "
+          f"{stm_mb:.2f}MB device-resident client rows "
+          f"(k={tr.orch.k}, chunk={chunk})")
+    assert tr.meter.bandwidth_bytes > 0
+    emit(f"client_store scale (C={n_clients}, DiskStore, lenet-micro "
+         "B=2 T=1 — completes with O(chunk)+O(S) device residency)",
+         [[n_clients, f"{init_s:.1f}", f"{round_s:.1f}",
+           f"{store_mb:.0f}", f"{stm_mb:.3f}"]],
+         ["n_clients", "init_s", "round_s", "store_disk_mb",
+          "device_client_mb"])
+
+
+def main():
+    if scale().smoke:
+        _stream_resident_table([32], accept_at=32)
+        _scale_table(10_000)
+        return
+    _stream_resident_table([32, 256], accept_at=32)
+    _scale_table(10_000)
+
+
+if __name__ == "__main__":
+    main()
+    write_bench_json("client_store")

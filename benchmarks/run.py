@@ -34,15 +34,16 @@ def main() -> None:
             only = set(a.split("=", 1)[1].split(","))
     t0 = time.time()
 
-    from benchmarks import ablation_masks, comparison, epoch_scan, \
-        fig1_tradeoff, global_phase, kernel_bench, round_scan, \
-        sensitivity, serve_traffic
+    from benchmarks import ablation_masks, client_store, comparison, \
+        epoch_scan, fig1_tradeoff, global_phase, kernel_bench, \
+        round_scan, sensitivity, serve_traffic
     from benchmarks.common import write_bench_json
 
     sections = [
         ("epoch_scan", epoch_scan.main),
         ("round_scan", round_scan.main),
         ("global_phase", global_phase.main),
+        ("client_store", client_store.main),
         ("table1", comparison.table1),
         ("table2", comparison.table2),
         ("table3", sensitivity.table3),
@@ -59,14 +60,33 @@ def main() -> None:
         if only and name not in only:
             continue
         t = time.time()
+        ran_ok = True
         try:
             fn()
         except Exception as e:  # keep the suite going, report at end
             print(f"### {name} FAILED: {e!r}\n")
             failed.append(name)
-        path = write_bench_json(name)
+            ran_ok = False
+        try:
+            path = write_bench_json(name)
+        except OSError as e:
+            # an unwritable BENCH_<name>.json must fail loudly, not as
+            # a raw traceback: the gate downstream reads these files
+            print(f"### {name} FAILED: could not write "
+                  f"BENCH_{name}.json ({e})\n")
+            failed.append(name)
+            path = None
         if path:
             written.append(path)
+        elif ran_ok and name not in failed:
+            # ran without error but emitted nothing -> the section's
+            # BENCH json is missing, which would silently shrink the
+            # gated aggregate; name the section instead of letting
+            # check_bench fail cryptically later
+            print(f"### {name} FAILED: produced no benchmark records "
+                  f"(BENCH_{name}.json missing — did the section "
+                  "forget to emit()?)\n")
+            failed.append(name)
         print(f"[{name} done in {time.time()-t:.0f}s]\n")
 
     # roofline summary from dry-run artifacts, if present
@@ -85,12 +105,23 @@ def main() -> None:
     if written:  # aggregate the per-section records
         agg = {"sections": []}
         for p in written:
-            with open(p) as f:
-                agg["sections"].append(json.load(f))
-        with open("BENCH_all.json", "w") as f:
-            json.dump(agg, f, indent=1)
-        print(f"[bench json aggregate -> BENCH_all.json "
-              f"({len(written)} sections)]")
+            try:
+                with open(p) as f:
+                    agg["sections"].append(json.load(f))
+            except OSError as e:
+                print(f"### aggregate FAILED: {p} missing or "
+                      f"unreadable ({e})")
+                failed.append(os.path.basename(p))
+        try:
+            with open("BENCH_all.json", "w") as f:
+                json.dump(agg, f, indent=1)
+        except OSError as e:
+            print(f"### aggregate FAILED: BENCH_all.json "
+                  f"unwritable ({e})")
+            failed.append("BENCH_all.json")
+        else:
+            print(f"[bench json aggregate -> BENCH_all.json "
+                  f"({len(written)} sections)]")
 
     print(f"benchmarks completed in {time.time()-t0:.0f}s")
     if failed:

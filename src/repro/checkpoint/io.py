@@ -1,5 +1,21 @@
 """Checkpoint IO: pytree <-> npz with path-flattened keys + msgpack
 metadata sidecar.  Round-trip tested, handles bf16 via uint16 view.
+
+Two storage layouts over the same path-flattened key scheme:
+
+* ``save_checkpoint`` / ``restore_checkpoint`` — ONE ``.npz`` archive
+  (zip of ``.npy`` members).  Compact, atomic-ish, but zip members
+  cannot be memory-mapped: ``rows=`` slices each leaf AFTER the full
+  array is decompressed (API-level partial restore, full-array IO).
+
+* ``save_checkpoint_dir`` / ``open_checkpoint_dir`` — one raw ``.npy``
+  FILE per leaf under a directory, named by flat-key order (the ordered
+  key list lives in the ``.meta`` sidecar, so arbitrary key strings
+  never hit the filesystem).  Raw ``.npy`` supports ``np.memmap``, so
+  reading or writing k client rows of a stacked (C, ...) leaf touches
+  O(k) rows of disk — this is the backend under
+  ``core/client_store.DiskStore``, which spills whole client
+  populations and gathers only each round's selected cohort.
 """
 from __future__ import annotations
 
@@ -41,8 +57,17 @@ def save_checkpoint(path: str, tree, metadata: Optional[dict] = None):
                                "metadata": metadata or {}}))
 
 
-def restore_checkpoint(path: str, like) -> Tuple[Any, dict]:
-    """Restore into the structure of ``like``.  Returns (tree, metadata)."""
+def restore_checkpoint(path: str, like, rows=None) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like``.  Returns (tree, metadata).
+
+    ``rows`` — optional leading-axis index (int array / list / slice):
+    every leaf is sliced ``a[rows]`` after load, so a checkpoint of
+    stacked (C, ...) client leaves restores just the k requested client
+    rows into a (k, ...) tree (``like`` must carry the sliced shapes).
+    npz members cannot be memory-mapped, so the slice saves transfer
+    and tree memory, not archive IO — use the ``_dir`` layout below
+    when gather IO itself must be O(k).
+    """
     data = np.load(path + ".npz")
     with open(path + ".meta", "rb") as f:
         meta = msgpack.unpackb(f.read())
@@ -50,6 +75,8 @@ def restore_checkpoint(path: str, like) -> Tuple[Any, dict]:
     restored = {}
     for k in flat_like:
         a = data[k]
+        if rows is not None:
+            a = a[rows]
         if meta["dtypes"].get(k) == "bfloat16":
             a = a.view(jnp.bfloat16)
         restored[k] = jnp.asarray(a)
@@ -57,3 +84,97 @@ def restore_checkpoint(path: str, like) -> Tuple[Any, dict]:
     keys = list(_flatten(like).keys())
     new_leaves = [restored[k] for k in keys]
     return treedef.unflatten(new_leaves), meta["metadata"]
+
+
+# ---------------------------------------------------------------------------
+# directory layout: one raw .npy per leaf, memory-mappable row access
+# ---------------------------------------------------------------------------
+
+
+def _leaf_path(path: str, i: int) -> str:
+    return os.path.join(path, f"leaf_{i:05d}.npy")
+
+
+def _to_disk_view(a: np.ndarray) -> Tuple[np.ndarray, str]:
+    """bf16 is stored as a uint16 view (np.save can't write ml_dtypes)."""
+    a = np.asarray(a)
+    if a.dtype == jnp.bfloat16:
+        return a.view(np.uint16), "bfloat16"
+    return a, str(a.dtype)
+
+
+def from_disk_view(a: np.ndarray, dtype: str) -> np.ndarray:
+    """Invert :func:`_to_disk_view` on an array (or sliced rows of one)."""
+    return a.view(jnp.bfloat16) if dtype == "bfloat16" else a
+
+
+def save_checkpoint_dir(path: str, tree, metadata: Optional[dict] = None):
+    """One raw ``.npy`` per leaf under directory ``path`` (+ ``.meta``
+    sidecar with the ordered key list), so leaves can be re-opened as
+    writable memory maps by :func:`open_checkpoint_dir`."""
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    keys, dtypes = list(flat.keys()), {}
+    for i, k in enumerate(keys):
+        a, dtypes[k] = _to_disk_view(flat[k])
+        np.save(_leaf_path(path, i), a)
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(os.path.join(path, "checkpoint.meta"), "wb") as f:
+        f.write(msgpack.packb({"treedef": str(treedef), "keys": keys,
+                               "dtypes": dtypes,
+                               "metadata": metadata or {}}))
+
+
+def alloc_checkpoint_dir(path: str, like, metadata: Optional[dict] = None
+                         ) -> Any:
+    """Create a ``save_checkpoint_dir``-layout checkpoint of ``like``'s
+    shapes/dtypes WITHOUT materializing the arrays: every leaf becomes
+    an uninitialized writable memmap (``open_memmap(mode="w+")``).
+    Returns the tree of memmaps — fill it row-ranges at a time (this is
+    how DiskStore spills a client population it never holds whole)."""
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(like)
+    keys, dtypes, mms = list(flat.keys()), {}, []
+    for i, k in enumerate(keys):
+        a = flat[k]
+        if getattr(a, "dtype", None) == jnp.bfloat16:
+            dt, dtypes[k] = np.dtype(np.uint16), "bfloat16"
+        else:
+            dt = np.dtype(a.dtype)
+            dtypes[k] = str(dt)
+        mms.append(np.lib.format.open_memmap(
+            _leaf_path(path, i), mode="w+", dtype=dt,
+            shape=tuple(a.shape)))
+    treedef = jax.tree_util.tree_structure(like)
+    with open(os.path.join(path, "checkpoint.meta"), "wb") as f:
+        f.write(msgpack.packb({"treedef": str(treedef), "keys": keys,
+                               "dtypes": dtypes,
+                               "metadata": metadata or {}}))
+    return treedef.unflatten(mms)
+
+
+def open_checkpoint_dir(path: str, like, *, mode: str = "r"
+                        ) -> Tuple[Any, dict]:
+    """Open a ``save_checkpoint_dir`` checkpoint as a tree of
+    ``np.memmap`` leaves (structure of ``like``), without reading the
+    arrays: ``tree_leaf[rows]`` then reads O(k) rows of disk.  Returns
+    (tree_of_memmaps, metadata).  ``mode="r+"`` maps writable — row
+    assignments go straight to the backing files (DiskStore scatter).
+
+    NOTE leaves are raw disk views: bf16 leaves surface as uint16 and
+    must go through :func:`from_disk_view` after slicing (the sidecar's
+    ``dtypes`` map, also under ``metadata['_dtypes']`` here, says
+    which)."""
+    with open(os.path.join(path, "checkpoint.meta"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    keys = meta["keys"]
+    flat_like = _flatten(like)
+    if list(flat_like.keys()) != keys:
+        raise ValueError(f"checkpoint dir {path} keys {keys} do not "
+                         f"match `like` keys {list(flat_like.keys())}")
+    mms = [np.load(_leaf_path(path, i), mmap_mode=mode)
+           for i in range(len(keys))]
+    treedef = jax.tree_util.tree_structure(like)
+    md = dict(meta["metadata"])
+    md["_dtypes"] = meta["dtypes"]
+    return treedef.unflatten(mms), md

@@ -146,6 +146,14 @@ class Meter:
     # device-layout-invariant, while interconnect bytes are a property
     # of the execution mesh (0 on a single device).
     interconnect_bytes: float = 0.0
+    # HOST<->device staging traffic: round-data H2D uploads (billed
+    # identically by every dispatch rung) plus, under the streamed
+    # client store, the store's cohort gather/scatter and activation
+    # spill traffic.  Like interconnect, a property of the execution
+    # strategy — NOT of the split protocol — so it is its own channel:
+    # eq. 2 bandwidth stays residency-invariant while benchmarks can
+    # report stream overhead honestly.
+    host_device_bytes: float = 0.0
 
     def add_payload(self, nbytes: float):
         self.bandwidth_bytes += nbytes
@@ -158,6 +166,9 @@ class Meter:
 
     def add_interconnect(self, nbytes: float):
         self.interconnect_bytes += nbytes
+
+    def add_host_device(self, nbytes: float):
+        self.host_device_bytes += nbytes
 
     @property
     def bandwidth_gb(self) -> float:
@@ -174,7 +185,8 @@ class Meter:
     def ingest_round(self, *, acts_shape, batch, n_clients, n_iters,
                      client_flops_per_example, server_flops_per_example,
                      nnz_fracs=None, n_selected=None, grad_down=False,
-                     dtype_bytes=4, interconnect_bytes=0.0):
+                     dtype_bytes=4, interconnect_bytes=0.0,
+                     host_device_bytes=0.0):
         """Bill a whole round of the protocol after ONE device fetch.
 
         The round scan (core/adasplit.py) accumulates per-iteration
@@ -192,6 +204,9 @@ class Meter:
         traffic under cohort sharding (the per-shard tallies are
         analytic on the host, summed here at the same one-fetch cadence
         as the payload billing; 0 on a single device).
+        ``host_device_bytes``: the round's host<->device staging traffic
+        (data uploads + streamed store gather/scatter), analytic like
+        interconnect and billed at the same cadence.
         """
         if nnz_fracs is not None:
             nnz_fracs = np.asarray(nnz_fracs)
@@ -208,12 +223,14 @@ class Meter:
                               * batch * n_iters * n_selected)
         if interconnect_bytes:
             self.add_interconnect(interconnect_bytes)
+        if host_device_bytes:
+            self.add_host_device(host_device_bytes)
 
     def ingest_epoch(self, *, n_rounds, acts_shape, batch, n_clients,
                      n_iters, client_flops_per_example,
                      server_flops_per_example, nnz_fracs=None,
                      n_selected=None, grad_down=False, dtype_bytes=4,
-                     interconnect_bytes=0.0):
+                     interconnect_bytes=0.0, host_device_bytes=0.0):
         """Bill a whole epoch (R on-device rounds, ONE device fetch).
 
         Literally ``n_rounds`` sequential :meth:`ingest_round` calls —
@@ -222,8 +239,8 @@ class Meter:
         same per-round history records as the per-round-dispatch path.
 
         nnz_fracs: optional (n_rounds, n_iters, k) stacked fractions.
-        ``interconnect_bytes`` is per ROUND (forwarded to each
-        :meth:`ingest_round`).
+        ``interconnect_bytes`` and ``host_device_bytes`` are per ROUND
+        (forwarded to each :meth:`ingest_round`).
         """
         summaries = []
         for r in range(n_rounds):
@@ -235,7 +252,8 @@ class Meter:
                 server_flops_per_example=server_flops_per_example,
                 nnz_fracs=fr, n_selected=n_selected,
                 grad_down=grad_down, dtype_bytes=dtype_bytes,
-                interconnect_bytes=interconnect_bytes)
+                interconnect_bytes=interconnect_bytes,
+                host_device_bytes=host_device_bytes)
             summaries.append(self.summary())
         return summaries
 
@@ -243,10 +261,15 @@ class Meter:
     def interconnect_gb(self) -> float:
         return self.interconnect_bytes / 1e9
 
+    @property
+    def host_device_gb(self) -> float:
+        return self.host_device_bytes / 1e9
+
     def summary(self) -> dict:
         return {
             "bandwidth_gb": self.bandwidth_gb,
             "client_tflops": self.client_tflops,
             "total_tflops": self.total_tflops,
             "interconnect_gb": self.interconnect_gb,
+            "host_device_gb": self.host_device_gb,
         }

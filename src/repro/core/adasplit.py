@@ -13,13 +13,20 @@ Faithful elements:
     structured per-unit masks (scale adaptation, DESIGN.md §3);
   * bandwidth / compute metering per eq. 1-2, C3-Score at the end.
 
-Three-level dispatch hierarchy (iteration -> round -> epoch)
-------------------------------------------------------------
+Dispatch hierarchy (iteration -> round -> epoch) and residency
+--------------------------------------------------------------
 The trainer is a ladder of reference implementations, each level
 fusing one more layer of the protocol's control plane into the
 compiled graph.  Every rung reproduces the rung below it —
 selections and meter totals bit-for-bit — so any level can serve as
-the differential oracle for the one above:
+the differential oracle for the one above.  ORTHOGONALLY to the
+ladder, per-client state residency is a two-position switch:
+**resident** (the default: all C clients' params / Adam moments /
+masks live on device as stacked ``(C, ...)`` leaves — O(C) device
+memory) or **streamed** (``streamed=True``: the same state lives in a
+host- or disk-backed ``core/client_store.py`` and the device holds
+only the O(chunk) rows in flight plus the round's O(S) selected
+cohort; see rung 5).  The ladder rungs:
 
 1. **Iteration-resident** (``round_scan=False``, the eager reference):
    one dispatch per protocol step — client step, host-side UCB
@@ -86,6 +93,41 @@ the differential oracle for the one above:
    the mesh's data size; otherwise the trainer warns and falls back to
    the replicated single-device path (the same must-always-lower
    policy as ``sharding/rules.py``).
+5. **Host-streamed** (``streamed=True``, orthogonal to rungs 1-3 and
+   composable with 4): per-client state moves off-device into a
+   ``core/client_store.py`` backend (``store_backend="host"`` pins it
+   in host numpy; ``"disk"`` spills to a memmappable
+   ``checkpoint/io.py`` directory checkpoint) and each round runs as
+   two passes that COMMUTE exactly with the resident interleaving —
+   the client steps never read anything the global steps write (the
+   ``server_grad_to_client`` ablation breaks that and falls back to
+   resident with a warning):
+
+   * **client pass** — all C clients stream through the device in
+     ``stream_chunk``-row cohorts via the PR-4 two-slot staging ring
+     (chunk k+1's H2D ``device_put`` + store gather overlap chunk k's
+     jitted T-iteration scan), updated params/moments scattering back
+     to the store as each chunk drains; split activations spill to a
+     host buffer.  Device residency: two chunks of client/proj/opt
+     rows, never O(C).
+   * **global pass** — per iteration, selection resolves FIRST on the
+     device-resident O(N) UCB state (``Orchestrator.select_on``), then
+     only the S selected clients' mask/opt rows + spilled activations
+     stage in, run the SAME jitted ``_global_step`` as the eager rung,
+     and scatter back; ``Orchestrator.update_on`` applies the identical
+     dense bandit update.  Device residency: O(S) rows.
+
+   The UCB state and selection math stay device-resident for the full
+   population throughout — only the O(C) training state streams.
+   Billing is unchanged on the protocol channels (``ingest_round`` /
+   ``ingest_epoch`` with identical arguments — bandwidth / FLOP totals
+   are residency-invariant and differentially pinned) while the
+   store's gather/scatter + activation-spill traffic lands on the
+   ``Meter.host_device_bytes`` channel that all rungs use for staging
+   H2D billing.  Composed with ``shard_clients``, each streamed chunk
+   is ``NamedSharding``-placed with its cohort axis on ``data`` (each
+   shard computes only its owned rows; no collectives, so
+   interconnect bytes stay 0) and the global pass runs replicated.
 
 Within one iteration the global phase is the PR-1 batched step: the
 selected S = eta*N clients run as one (S*B)-flattened forward with
@@ -101,12 +143,14 @@ step (reproduces the seed's per-client loop bit-for-bit);
 ``round_scan=False`` the per-iteration eager driver — both as reference
 implementations for the differential tests and benchmarks
 (``benchmarks/round_scan.py``, ``benchmarks/global_phase.py``).
-``fused_mask_adam=True`` routes the per-client mask updates through the
+``fused_mask_adam`` routes the per-client mask updates through the
 fused Pallas masked-Adam kernel on TPU (``kernels/masked_adam``),
-falling back to ``adam_update`` elsewhere; ``fused_server_adam=True``
-does the same for the server optimizer step under the same
-TPU-native/fallback gating (both opt-in until benchmarked natively on
-a real TPU).
+falling back to ``adam_update`` elsewhere; ``fused_server_adam`` does
+the same for the server optimizer step under the same
+TPU-native/fallback gating.  Both default to ``None`` = backend-aware:
+auto-ON when ``jax.default_backend() == "tpu"`` (where the kernels are
+native), auto-OFF elsewhere; an explicit True/False always wins
+(``_fused_default``).
 
 ``batched_conv=True`` (default) lowers every per-client conv in the hot
 path — the vmapped client step, the joint step's client part, the
@@ -143,6 +187,7 @@ from repro.core import masks as masks_mod
 from repro.core.accounting import (Meter, lenet_flops_per_example,
                                    split_payload_bytes)
 from repro.core.c3 import c3_score
+from repro.core.client_store import make_store
 from repro.core.losses import (accuracy, cross_entropy, l1_penalty,
                                ntxent_supervised)
 from repro.core.orchestrator import (Orchestrator, ucb_advantage,
@@ -179,15 +224,32 @@ class AdaSplitHParams:
                                     # (0 = whole epoch device-resident;
                                     # 1 degenerates to per-round dispatch)
     flat_joint: bool = True         # S*B-flattened joint step (vs vmap ref)
-    fused_mask_adam: bool = False   # Pallas fused mask update (TPU only)
-    fused_server_adam: bool = False  # Pallas fused server Adam (TPU only)
+    fused_mask_adam: Optional[bool] = None    # Pallas fused mask update;
+    fused_server_adam: Optional[bool] = None  # Pallas fused server Adam;
+                                    # None = backend-aware default (auto-
+                                    # on on TPU, off elsewhere)
     batched_conv: bool = True       # im2col batched-GEMM convs (False = ref)
     fused_epilogue: bool = False    # bias+ReLU in the Pallas GEMM epilogue
                                     # (TPU; identical XLA ops elsewhere)
     shard_clients: bool = False     # shard_map the stacked client axis C
                                     # over the mesh's `data` axis (falls
                                     # back to 1-device when C % ndev != 0)
+    streamed: bool = False          # host/disk-backed client store:
+                                    # device holds O(chunk)+O(S) client
+                                    # rows instead of O(C)
+    store_backend: str = "host"     # "host" (pinned numpy) | "disk"
+                                    # (checkpoint-spill memmaps)
+    store_dir: Optional[str] = None  # DiskStore directory (None = tmp)
+    stream_chunk: int = 0           # client rows per streamed device
+                                    # cohort (0 = auto)
     seed: int = 0
+
+
+def _fused_default(flag: Optional[bool], on_tpu: bool) -> bool:
+    """Backend-aware default for the fused Pallas Adam kernels: ``None``
+    resolves to on iff running on TPU (where the kernels lower
+    natively); an explicit True/False always wins."""
+    return on_tpu if flag is None else bool(flag)
 
 
 def _proj_init(key, in_dim, proj_dim):
@@ -210,32 +272,58 @@ class AdaSplitTrainer:
         key = jax.random.PRNGKey(hp.seed)
         kc, ks, kp = jax.random.split(key, 3)
 
-        # per-client models (stacked leading C) + projection heads
-        cps = [lenet.init_client_params(cfg, jax.random.fold_in(kc, i))
-               for i in range(self.n)]
-        self.client_params = jax.tree.map(lambda *x: jnp.stack(x), *cps)
-        acts_dim = self._acts_dim()
-        pps = [_proj_init(jax.random.fold_in(kp, i), acts_dim, hp.proj_dim)
-               for i in range(self.n)]
-        self.proj_params = jax.tree.map(lambda *x: jnp.stack(x), *pps)
-        self.server_params = lenet.init_server_params(cfg, ks)
-
-        if hp.mask_mode == "per_scalar":
-            self.masks = masks_mod.init_scalar_masks(self.server_params,
-                                                     self.n)
-        else:
-            self.masks = masks_mod.init_lenet_unit_masks(cfg, self.n)
-
-        # per-client Adam states carry a per-client step vector so they can
-        # be sliced/vmapped uniformly
-        self.c_opt = adam_init({"c": self.client_params,
-                                "p": self.proj_params})
-        self.c_opt["step"] = jnp.zeros((self.n,), jnp.int32)
-        self.s_opt = adam_init(self.server_params)
-        self.m_opt = adam_init(self.masks)
-        self.m_opt["step"] = jnp.zeros((self.n,), jnp.int32)
-
         self.orch = Orchestrator(self.n, hp.eta, hp.gamma, seed=hp.seed)
+        self._streamed = hp.streamed
+        if self._streamed and hp.server_grad_to_client:
+            warnings.warn(
+                "streamed=True is incompatible with the joint "
+                "server_grad_to_client step (it updates client params "
+                "mid-round, so the client/global passes no longer "
+                "commute); falling back to the resident path")
+            self._streamed = False
+        if self._streamed and not hp.global_batch:
+            warnings.warn("streamed=True requires the batched global "
+                          "phase (global_batch=True); falling back to "
+                          "the resident path")
+            self._streamed = False
+        self._stream_chunk = min(self.n, hp.stream_chunk
+                                 or max(32, self.orch.k))
+
+        acts_dim = self._acts_dim()
+        self.server_params = lenet.init_server_params(cfg, ks)
+        self.s_opt = adam_init(self.server_params)
+        self.store = None
+        if self._streamed:
+            # O(chunk) device residency from step zero: init streams
+            # through the store chunk-wise (vmapped fold_in init is
+            # bit-identical to the resident per-client stack)
+            self._init_streamed_store(kc, kp, acts_dim)
+            self.client_params = self.proj_params = None
+            self.masks = self.c_opt = self.m_opt = None
+        else:
+            # per-client models (stacked leading C) + projection heads
+            cps = [lenet.init_client_params(cfg, jax.random.fold_in(kc, i))
+                   for i in range(self.n)]
+            self.client_params = jax.tree.map(lambda *x: jnp.stack(x), *cps)
+            pps = [_proj_init(jax.random.fold_in(kp, i), acts_dim,
+                              hp.proj_dim)
+                   for i in range(self.n)]
+            self.proj_params = jax.tree.map(lambda *x: jnp.stack(x), *pps)
+
+            if hp.mask_mode == "per_scalar":
+                self.masks = masks_mod.init_scalar_masks(self.server_params,
+                                                         self.n)
+            else:
+                self.masks = masks_mod.init_lenet_unit_masks(cfg, self.n)
+
+            # per-client Adam states carry a per-client step vector so
+            # they can be sliced/vmapped uniformly
+            self.c_opt = adam_init({"c": self.client_params,
+                                    "p": self.proj_params})
+            self.c_opt["step"] = jnp.zeros((self.n,), jnp.int32)
+            self.m_opt = adam_init(self.masks)
+            self.m_opt["step"] = jnp.zeros((self.n,), jnp.int32)
+
         self.meter = Meter()
         self._fl_c = lenet_flops_per_example(cfg, "client")
         self._fl_s = lenet_flops_per_example(cfg, "server")
@@ -276,6 +364,14 @@ class AdaSplitTrainer:
             return
         self._mesh, self._ax, self._shard = mesh, ax, True
         self._n_local = self.n // ax.data_size
+        if self._streamed:
+            # streamed composition: no resident carries to place — each
+            # streamed chunk is NamedSharding-placed per round with its
+            # cohort axis on `data` (per-row-independent client pass, no
+            # collectives); the global pass and UCB state stay on the
+            # default device.  Chunks whose row count doesn't divide the
+            # data axis stage replicated (must-always-lower fallback).
+            return
 
         def rep(tree):
             return jax.tree.map(lambda _: P(), tree)
@@ -293,6 +389,65 @@ class AdaSplitTrainer:
             lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
             self._carry(), self._carry_specs)
         self.client_params, self.proj_params = cp_pp["c"], cp_pp["p"]
+
+    # ------------------------------------------------------------------
+    # streamed residency: host/disk client store, O(chunk)+O(S) device
+    # ------------------------------------------------------------------
+    def _init_streamed_store(self, kc, kp, acts_dim):
+        """Populate the client store chunk by chunk without ever
+        materializing the (C, ...) stacked trees on device.  The
+        vmapped ``fold_in`` init is bit-identical to the resident
+        per-client ``jnp.stack`` (verified differentially), masks init
+        to constant ones and Adam moments to zeros — so a streamed
+        trainer starts from exactly the resident trainer's state."""
+        hp, cfg = self.hp, self.cfg
+        self.store = make_store(hp.store_backend, self.n,
+                                directory=hp.store_dir)
+        init_c = jax.vmap(lambda k: lenet.init_client_params(cfg, k))
+        init_p = jax.vmap(lambda k: _proj_init(k, acts_dim, hp.proj_dim))
+        fold = jax.vmap(lambda i: jax.random.fold_in(kc, i))
+        fold_p = jax.vmap(lambda i: jax.random.fold_in(kp, i))
+        chunk = self._stream_chunk
+        for i0 in range(0, self.n, chunk):
+            m = min(chunk, self.n - i0)
+            ids = jnp.arange(i0, i0 + m)
+            cp = init_c(fold(ids))
+            pp = init_p(fold_p(ids))
+            co = adam_init({"c": cp, "p": pp})
+            co["step"] = jnp.zeros((m,), jnp.int32)
+            if hp.mask_mode == "per_scalar":
+                mk = masks_mod.init_scalar_masks(self.server_params, m)
+            else:
+                mk = masks_mod.init_lenet_unit_masks(cfg, m)
+            mo = adam_init(mk)
+            mo["step"] = jnp.zeros((m,), jnp.int32)
+            groups = {"cp": {"c": cp, "p": pp}, "co": co,
+                      "m": mk, "mo": mo}
+            if i0 == 0:
+                for name, tree in groups.items():
+                    self.store.alloc(name, jax.tree.map(
+                        lambda l: jax.ShapeDtypeStruct(
+                            (self.n,) + l.shape[1:], l.dtype), tree))
+            self.store.scatter(np.arange(i0, i0 + m), groups)
+
+    def _stream_put_rows(self, tree, m):
+        """Device placement for a streamed chunk of (m, ...) client-state
+        rows: cohort axis on ``data`` when sharding (and m divides the
+        data axis), plain transfer otherwise."""
+        if self._shard and m % self._ax.data_size == 0:
+            specs = cohort_pspecs(tree, self._ax, cohort_size=m)
+            return jax.tree.map(
+                lambda x, sp: jax.device_put(
+                    x, NamedSharding(self._mesh, sp)), tree, specs)
+        return jax.device_put(tree)
+
+    def _stream_put_data(self, x, m):
+        """Device placement for a streamed chunk's (T, m, B, ...) round
+        data (cohort axis = dim 1)."""
+        if self._shard and m % self._ax.data_size == 0:
+            spec = staged_cohort_spec(self._ax, x.ndim, cohort_dim=1)
+            return jax.device_put(x, NamedSharding(self._mesh, spec))
+        return jax.device_put(x)
 
     def _put_staged(self, x, *, cohort_dim):
         """Device placement for staged (T, C, B, ...) / (R, T, C, B,
@@ -333,6 +488,39 @@ class AdaSplitTrainer:
                 * self.cfg.image_size ** 2                  # images
         return float((self._ax.data_size - 1) * full)
 
+    def _staging_bytes_per_round(self, T: int) -> float:
+        """Analytic H2D bytes for staging one round's batches: (T, C, B)
+        f32 images + int32 labels.  Billed IDENTICALLY by every dispatch
+        rung (the eager driver uploads (C, B, ...) per iteration, the
+        scans (T, C, B, ...) per round, the epoch ring (R, T, C, B, ...)
+        per chunk — same totals), so the ``host_device_bytes`` channel
+        stays rung-invariant on the resident ladder."""
+        img = 4 * 3 * self.cfg.image_size ** 2
+        return float(T * self.n * self.hp.batch_size * (img + 4))
+
+    def _stream_store_bytes(self, T: int, global_phase: bool) -> float:
+        """Analytic host<->device bytes for ONE streamed round's store
+        traffic (on top of the data staging every rung bills):
+
+        * client pass: every client's params/opt row crosses twice
+          (gather H2D + scatter D2H) and its (T, B, ...) split
+          activations spill D2H to the host buffer;
+        * global pass: per iteration, the S selected clients' mask/opt
+          rows cross twice and their activations + labels re-stage H2D.
+
+        HostStore and DiskStore rows are byte-identical (bf16 disk
+        views keep the itemsize), so billing is backend-invariant.
+        """
+        hp = self.hp
+        act = 4 * int(np.prod(self._acts_spatial))
+        b = 2.0 * self.store.nbytes(("cp", "co"))
+        b += float(T * self.n * hp.batch_size * act)
+        if global_phase:
+            row = self.store.row_nbytes(("m", "mo"))
+            payload = hp.batch_size * (act + 4)
+            b += float(T * self.orch.k * (2 * row + payload))
+        return b
+
     # ------------------------------------------------------------------
     def _acts_dim(self):
         x = jnp.zeros((1, self.cfg.image_size, self.cfg.image_size, 3))
@@ -365,8 +553,9 @@ class AdaSplitTrainer:
                     return adam_update(p, g, o, lr=hp.lr)
             return step
 
-        mask_adam = gated_adam(hp.fused_mask_adam)
-        server_adam = gated_adam(hp.fused_server_adam)
+        mask_adam = gated_adam(_fused_default(hp.fused_mask_adam, on_tpu))
+        server_adam = gated_adam(_fused_default(hp.fused_server_adam,
+                                                on_tpu))
 
         def client_loss(cp_pp, x, y):
             acts = lenet.client_forward(cfg, cp_pp["c"], x,
@@ -844,14 +1033,16 @@ class AdaSplitTrainer:
                 n_selected=idx_all.shape[1],
                 grad_down=hp.server_grad_to_client,
                 interconnect_bytes=self._iteration_interconnect_bytes()
-                * T)
+                * T,
+                host_device_bytes=self._staging_bytes_per_round(T))
             self.orch.ingest_round(idx_all, ces_all, state=ucb)
         else:
             self.meter.ingest_round(
                 acts_shape=acts_shape, batch=hp.batch_size,
                 n_clients=self.n, n_iters=T,
                 client_flops_per_example=self._fl_c,
-                server_flops_per_example=self._fl_s, n_selected=0)
+                server_flops_per_example=self._fl_s, n_selected=0,
+                host_device_bytes=self._staging_bytes_per_round(T))
             self.orch.state = ucb
 
     # ------------------------------------------------------------------
@@ -912,7 +1103,8 @@ class AdaSplitTrainer:
         bill = dict(acts_shape=acts_shape, batch=hp.batch_size,
                     n_clients=self.n, n_iters=T,
                     client_flops_per_example=self._fl_c,
-                    server_flops_per_example=self._fl_s)
+                    server_flops_per_example=self._fl_s,
+                    host_device_bytes=self._staging_bytes_per_round(T))
         if global_phase:
             fetched = jax.device_get(outs_all)      # the ONE epoch sync
             idx_all = np.concatenate([f[0] for f in fetched])
@@ -930,6 +1122,215 @@ class AdaSplitTrainer:
                                                 **bill)
             self.orch.ingest_epoch(None, None, state=ucb, n_rounds=R)
         return summaries
+
+    # ------------------------------------------------------------------
+    # streamed rounds: client store residency, two commuting passes
+    # ------------------------------------------------------------------
+    def _client_pass_fn(self, T: int, m: int):
+        """One jitted fn scanning the vmapped client step over a round's
+        T iterations for an (m, ...)-row streamed chunk, returning the
+        updated rows + the stacked (T, m, B, ...) split activations.
+        Cached per (T, m); chunk rows are donated off-CPU."""
+        cache_key = ("stream", T, m)
+        if cache_key in self._round_fns:
+            return self._round_fns[cache_key]
+        client_step = self._client_step_fn
+        on_cpu = jax.default_backend() == "cpu"
+        unroll = T if (on_cpu and 1 <= T <= 8) else 1
+
+        def chunk_fn(cp, co, xs, ys):
+            def body(carry, xy):
+                cp, co = carry
+                x, y = xy
+                cp, co, _, acts = client_step(cp, co, x, y)
+                return (cp, co), acts
+
+            (cp, co), acts = jax.lax.scan(body, (cp, co), (xs, ys),
+                                          unroll=unroll)
+            return cp, co, acts
+
+        donate = () if on_cpu else (0, 1)
+        fn = jax.jit(chunk_fn, donate_argnums=donate)
+        self._round_fns[cache_key] = fn
+        return fn
+
+    def _stream_one_round(self, ucb, t_base: int, iters, T: int,
+                          global_phase: bool):
+        """One streamed round over the client store: the two passes that
+        commute exactly with the resident interleaving (client steps
+        never read what global steps write — the ``server_grad_to_client``
+        ablation, which breaks this, falls back to resident at init).
+
+        Pass A streams every client's params/opt rows through the device
+        in ``stream_chunk`` cohorts (two-slot ring: chunk k+1's store
+        gather + H2D overlaps chunk k's scan), spilling split
+        activations to a host buffer.  Pass B re-runs the round's global
+        iterations against the spilled activations: selection resolves
+        FIRST on the device-resident UCB state, then only the selected
+        S rows stage in and out.  Returns the final UCB state + the
+        round's (T, k) selections / CE losses / nnz fractions (host),
+        without touching the meter or orchestrator — callers bill at
+        their own cadence."""
+        hp = self.hp
+        n = self.n
+        chunk = self._stream_chunk
+        use_scan = hp.round_scan and hp.global_batch
+        acts_all = None
+        ys_all = None
+
+        def stage(i0, m):
+            rows = np.arange(i0, i0 + m)
+            xs = np.stack([np.stack([iters[i][t][0]
+                                     for i in range(i0, i0 + m)])
+                           for t in range(T)])
+            ys = np.stack([np.stack([iters[i][t][1]
+                                     for i in range(i0, i0 + m)])
+                           for t in range(T)])
+            g = self.store.gather(rows, ("cp", "co"))
+            return (rows, ys,
+                    self._stream_put_data(xs, m),
+                    self._stream_put_data(ys, m),
+                    self._stream_put_rows(g["cp"], m),
+                    self._stream_put_rows(g["co"], m))
+
+        # ---- pass A: chunked client pass over ALL rows ---------------
+        starts = list(range(0, n, chunk))
+        ring = [stage(0, min(chunk, n))]
+        for ci, i0 in enumerate(starts):
+            m = min(chunk, n - i0)
+            rows, ys_np, xs_d, ys_d, cp_d, co_d = ring.pop(0)
+            if use_scan:
+                cp_d, co_d, acts = self._client_pass_fn(T, m)(
+                    cp_d, co_d, xs_d, ys_d)
+            else:
+                # eager rung: one dispatch per protocol iteration
+                acc = []
+                for t in range(T):
+                    cp_d, co_d, _, a = self._client_step(
+                        cp_d, co_d, xs_d[t], ys_d[t])
+                    acc.append(a)
+                acts = jnp.stack(acc)
+            if ci + 1 < len(starts):        # two-slot ring: next chunk's
+                n0 = starts[ci + 1]         # gather + H2D overlaps this
+                ring.append(stage(n0, min(chunk, n - n0)))
+            acts_np = np.asarray(acts)      # drain: activation spill D2H
+            if acts_all is None:
+                acts_all = np.empty((T, n) + acts_np.shape[2:],
+                                    acts_np.dtype)
+                ys_all = np.empty((T, n) + ys_np.shape[2:], ys_np.dtype)
+            acts_all[:, i0:i0 + m] = acts_np
+            ys_all[:, i0:i0 + m] = ys_np
+            self.store.scatter(rows, {"cp": cp_d, "co": co_d})
+
+        if not global_phase:
+            return ucb, None, None, None
+
+        # ---- pass B: per-iteration select -> gather -> global step ---
+        k = self.orch.k
+        idx_all = np.empty((T, k), np.int32)
+        ces_l, fracs_l = [], []
+        for t in range(T):
+            idx = self.orch.select_on(ucb, t_base + t)
+            idx_np = np.asarray(idx)        # selection resolves before
+            sel = self.store.gather(idx_np, ("m", "mo"))  # staging
+            (self.server_params, self.s_opt, masks_sel, mopt_sel, ces,
+             fracs) = self._global_step(
+                self.server_params, self.s_opt, sel["m"], sel["mo"],
+                jnp.asarray(acts_all[t, idx_np]),
+                jnp.asarray(ys_all[t, idx_np]))
+            ucb = self.orch.update_on(ucb, idx, ces)
+            self.store.scatter(idx_np, {"m": masks_sel, "mo": mopt_sel})
+            idx_all[t] = idx_np
+            ces_l.append(ces)
+            fracs_l.append(fracs)
+        ces_all, fracs_all = jax.device_get((ces_l, fracs_l))
+        return ucb, idx_all, np.stack(ces_all), np.stack(fracs_all)
+
+    def _run_round_streamed(self, iters, T: int, global_phase: bool):
+        """Streamed counterpart of ``_run_round_scan`` /
+        ``_dispatch_round``: same billing shape (one ``ingest_round`` +
+        ``ingest_round`` orchestrator replay per round), with the store
+        gather/scatter + activation-spill traffic added on the
+        ``host_device_bytes`` channel — the protocol channels are
+        billed with IDENTICAL arguments, so bandwidth / FLOP totals are
+        residency-invariant."""
+        if T == 0:
+            return
+        hp = self.hp
+        ucb, idx_all, ces_all, fracs_all = self._stream_one_round(
+            self.orch.state, self.orch._n_selects, iters, T, global_phase)
+        acts_shape = (hp.batch_size,) + self._acts_spatial
+        hd = (self._staging_bytes_per_round(T)
+              + self._stream_store_bytes(T, global_phase))
+        if global_phase:
+            self.meter.ingest_round(
+                acts_shape=acts_shape, batch=hp.batch_size,
+                n_clients=self.n, n_iters=T,
+                client_flops_per_example=self._fl_c,
+                server_flops_per_example=self._fl_s,
+                nnz_fracs=fracs_all if hp.act_l1 else None,
+                n_selected=idx_all.shape[1],
+                grad_down=hp.server_grad_to_client,
+                host_device_bytes=hd)
+            self.orch.ingest_round(idx_all, ces_all, state=ucb)
+        else:
+            self.meter.ingest_round(
+                acts_shape=acts_shape, batch=hp.batch_size,
+                n_clients=self.n, n_iters=T,
+                client_flops_per_example=self._fl_c,
+                server_flops_per_example=self._fl_s, n_selected=0,
+                host_device_bytes=hd)
+            self.orch.state = ucb
+
+    def _run_epoch_streamed(self, R: int, T: int, global_phase: bool,
+                            make_iters):
+        """Streamed counterpart of ``_run_epoch_scan``: R rounds with
+        the round boundary's ``ucb_new_round`` applied to the live
+        device state between streamed rounds, billed by ONE
+        ``ingest_epoch`` / ``Orchestrator.ingest_epoch`` pair — history
+        records bit-match the resident epoch driver's."""
+        hp = self.hp
+        ucb = self.orch.state
+        base = self.orch._n_selects
+        idx_r, ces_r, fracs_r = [], [], []
+        for r in range(R):
+            ucb = ucb_new_round(ucb, gamma=hp.gamma)  # round boundary
+            ucb, idx, ces, fracs = self._stream_one_round(
+                ucb, base + r * T, make_iters(), T, global_phase)
+            if global_phase:
+                idx_r.append(idx)
+                ces_r.append(ces)
+                fracs_r.append(fracs)
+        acts_shape = (hp.batch_size,) + self._acts_spatial
+        bill = dict(acts_shape=acts_shape, batch=hp.batch_size,
+                    n_clients=self.n, n_iters=T,
+                    client_flops_per_example=self._fl_c,
+                    server_flops_per_example=self._fl_s,
+                    host_device_bytes=self._staging_bytes_per_round(T)
+                    + self._stream_store_bytes(T, global_phase))
+        if global_phase:
+            summaries = self.meter.ingest_epoch(
+                n_rounds=R,
+                nnz_fracs=np.stack(fracs_r) if hp.act_l1 else None,
+                n_selected=idx_r[0].shape[1],
+                grad_down=hp.server_grad_to_client, **bill)
+            self.orch.ingest_epoch(np.stack(idx_r), np.stack(ces_r),
+                                   state=ucb)
+        else:
+            summaries = self.meter.ingest_epoch(n_rounds=R, n_selected=0,
+                                                **bill)
+            self.orch.ingest_epoch(None, None, state=ucb, n_rounds=R)
+        return summaries
+
+    def client_state(self):
+        """Host copies of the stacked per-client state as the store's
+        dict-of-groups view — the residency-agnostic accessor used by
+        checkpoints and the streamed-vs-resident differential tests."""
+        if self._streamed:
+            return self.store.full()
+        return jax.tree.map(np.asarray, {
+            "cp": {"c": self.client_params, "p": self.proj_params},
+            "co": self.c_opt, "m": self.masks, "mo": self.m_opt})
 
     # ------------------------------------------------------------------
     def _client_slice(self, tree, i):
@@ -1053,7 +1454,11 @@ class AdaSplitTrainer:
             self.orch.new_round()
             iters = [list(self._epoch_batches(i)) for i in range(self.n)]
             T = min(len(it) for it in iters)
-            if use_scan:
+            if self._streamed:
+                # same batches, same selection keys — only residency
+                # differs (pass A picks the use_scan dispatch style)
+                self._run_round_streamed(iters, T, global_phase)
+            elif use_scan:
                 self._run_round_scan(iters, T, global_phase)
             else:
                 for t in range(T):
@@ -1066,6 +1471,10 @@ class AdaSplitTrainer:
                     # 3x forward FLOPs for fwd+bwd
                     self.meter.add_client_flops(
                         3 * fl_c * self.n * hp.batch_size)
+                    # per-iteration (C, B, ...) upload — sums to the
+                    # same round total the scan drivers bill
+                    self.meter.add_host_device(
+                        self._staging_bytes_per_round(1))
 
                     if not global_phase:
                         continue
@@ -1096,14 +1505,19 @@ class AdaSplitTrainer:
         def is_eval(r):
             return (r + 1) % eval_every == 0 or r == hp.rounds - 1
 
-        def make_round():
-            """One round's staged data, drawn from the SAME per-client
-            RNG stream (and in the same order) as the eager drivers.
-            Called lazily by the staging ring — at most two chunks of
-            batches are ever materialized on the host."""
+        def make_iters():
+            """One round's per-client batch lists, drawn from the SAME
+            per-client RNG stream (and in the same order) as the eager
+            drivers."""
             iters = [list(self._epoch_batches(i)) for i in range(self.n)]
             assert min(len(it) for it in iters) == T
-            return self._stage_round_np(iters, T, self.n)
+            return iters
+
+        def make_round():
+            """One round's staged data.  Called lazily by the staging
+            ring — at most two chunks of batches are ever materialized
+            on the host."""
+            return self._stage_round_np(make_iters(), T, self.n)
 
         r = 0
         while r < hp.rounds:
@@ -1119,6 +1533,9 @@ class AdaSplitTrainer:
                 summaries = []
                 for _ in range(R):
                     self.orch.new_round()
+            elif self._streamed:
+                summaries = self._run_epoch_streamed(R, T, global_phase,
+                                                     make_iters)
             else:
                 summaries = self._run_epoch_scan([make_round] * R, T,
                                                  global_phase)
@@ -1140,6 +1557,8 @@ class AdaSplitTrainer:
 
     # ------------------------------------------------------------------
     def evaluate(self) -> float:
+        if self._streamed:
+            return self._evaluate_streamed()
         shapes = {cd.test_x.shape for cd in self.clients}
         if len(shapes) == 1:
             xs = jnp.asarray(np.stack([cd.test_x for cd in self.clients]))
@@ -1151,6 +1570,35 @@ class AdaSplitTrainer:
         for i, cd in enumerate(self.clients):
             cp = self._client_slice(self.client_params, i)
             mask_i = self._client_slice(self.masks, i)
+            acc = self._eval_client(cp, self.server_params, mask_i,
+                                    jnp.asarray(cd.test_x),
+                                    jnp.asarray(cd.test_y))
+            accs.append(float(acc))
+        return 100.0 * float(np.mean(accs))
+
+    def _evaluate_streamed(self) -> float:
+        """Chunked evaluation over the client store — only O(chunk)
+        client rows are ever device-resident."""
+        shapes = {cd.test_x.shape for cd in self.clients}
+        chunk = self._stream_chunk
+        if len(shapes) == 1:
+            accs = np.empty((self.n,), np.float32)
+            for i0 in range(0, self.n, chunk):
+                m = min(chunk, self.n - i0)
+                rows = np.arange(i0, i0 + m)
+                g = self.store.gather(rows, ("cp", "m"))
+                xs = jnp.asarray(np.stack(
+                    [self.clients[i].test_x for i in rows]))
+                ys = jnp.asarray(np.stack(
+                    [self.clients[i].test_y for i in rows]))
+                accs[i0:i0 + m] = np.asarray(self._eval_all(
+                    g["cp"]["c"], self.server_params, g["m"], xs, ys))
+            return 100.0 * float(np.mean(accs))
+        accs = []
+        for i, cd in enumerate(self.clients):
+            g = self.store.gather(np.asarray([i]), ("cp", "m"))
+            cp = jax.tree.map(lambda l: l[0], g["cp"]["c"])
+            mask_i = jax.tree.map(lambda l: l[0], g["m"])
             acc = self._eval_client(cp, self.server_params, mask_i,
                                     jnp.asarray(cd.test_x),
                                     jnp.asarray(cd.test_y))

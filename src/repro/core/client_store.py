@@ -1,0 +1,153 @@
+"""Host-backed stores for stacked per-client training state.
+
+The resident trainer keeps every client's params, Adam moments and
+masks device-resident as (C, ...) stacked leaves — O(C) device memory
+for a protocol whose every round touches only the S = eta*N selected
+clients plus the O(N)-small UCB state.  ``AdaSplitHParams.streamed``
+splits that residency: the bandit state and selection math stay on
+device for the full population, while the per-client trees live in a
+:class:`ClientStore` and only the slices a round actually touches are
+gathered into dense (S, ...) / (chunk, ...) device trees
+(``core/adasplit.py`` streamed drivers).
+
+Two backends over one row-indexed contract:
+
+* :class:`HostStore` — leaves are host numpy arrays.  Gather/scatter
+  are fancy-indexed row copies; the population is bounded by host RAM
+  instead of device memory.
+
+* :class:`DiskStore` — leaves are writable ``np.memmap`` views over a
+  ``checkpoint/io.py`` directory checkpoint (one raw ``.npy`` per
+  leaf), so gather/scatter of k rows touch O(k) rows of disk and the
+  population is bounded by disk.  ``flush()`` makes the spill a valid
+  checkpoint readable by ``open_checkpoint_dir`` from another process.
+
+The store's value tree is a DICT of named groups (e.g. ``{"cp": ...,
+"co": ..., "m": ..., "mo": ...}``) so callers gather only the groups a
+phase needs (the global step wants masks + mask-opt rows, not client
+params).  All leaves carry a leading client axis C; ``rows`` are
+global client ids (numpy int array).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Dict, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.io import alloc_checkpoint_dir, open_checkpoint_dir
+from repro.core.masks import host_gather_clients, host_scatter_clients
+
+
+def tree_nbytes(tree) -> int:
+    """Total bytes of a pytree of arrays (host or device)."""
+    return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def _subset(groups: Dict[str, Any], keys: Optional[Iterable[str]]):
+    if keys is None:
+        return groups
+    return {k: groups[k] for k in keys}
+
+
+class ClientStore:
+    """Row-indexed host/disk store of stacked (C, ...) client trees."""
+
+    def __init__(self, n: int):
+        self.n = int(n)
+        self._groups: Dict[str, Any] = {}
+
+    # -- population -----------------------------------------------------
+    def adopt(self, groups: Dict[str, Any]):
+        """Take ownership of fully-materialized (C, ...) group trees."""
+        for name, tree in groups.items():
+            self.alloc(name, jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree))
+            self.scatter(np.arange(self.n), {name: tree})
+        return self
+
+    def alloc(self, name: str, template):
+        """Allocate one named group from a tree of (C, ...) shape/dtype
+        structs (or arrays; values are NOT copied) — fill it with
+        :meth:`scatter` chunk by chunk."""
+        raise NotImplementedError
+
+    # -- row access ------------------------------------------------------
+    def gather(self, rows, keys: Optional[Iterable[str]] = None):
+        """Dense (k, ...) host copies of ``rows`` for the named groups
+        (all groups when ``keys`` is None)."""
+        return host_gather_clients(_subset(self._groups, keys), rows)
+
+    def scatter(self, rows, groups: Dict[str, Any]):
+        """Write (k, ...) updated rows back.  ``groups`` holds a subset
+        of the store's named groups; device arrays are fetched (this is
+        the stream's D2H edge)."""
+        host_scatter_clients(_subset(self._groups, list(groups)),
+                             rows, groups)
+
+    def full(self, keys: Optional[Iterable[str]] = None):
+        """The whole (C, ...) population as host arrays (tests/eval at
+        small C; O(C) host memory by definition)."""
+        return jax.tree.map(np.asarray, _subset(self._groups, keys))
+
+    # -- accounting ------------------------------------------------------
+    def nbytes(self, keys: Optional[Iterable[str]] = None) -> int:
+        return tree_nbytes(_subset(self._groups, keys))
+
+    def row_nbytes(self, keys: Optional[Iterable[str]] = None) -> int:
+        """Bytes of ONE client's row across the named groups — the unit
+        of the streamed path's H2D/D2H billing."""
+        return self.nbytes(keys) // max(self.n, 1)
+
+    def flush(self):
+        pass
+
+
+class HostStore(ClientStore):
+    """Leaves are host numpy arrays (population bounded by host RAM)."""
+
+    def alloc(self, name: str, template):
+        self._groups[name] = jax.tree.map(
+            lambda l: np.empty(l.shape, np.dtype(l.dtype)), template)
+
+
+class DiskStore(ClientStore):
+    """Leaves are writable memmaps over a ``checkpoint/io`` directory
+    checkpoint (population bounded by disk; O(k) row IO)."""
+
+    def __init__(self, n: int, directory: Optional[str] = None):
+        super().__init__(n)
+        self.directory = directory or tempfile.mkdtemp(
+            prefix="adasplit_client_store_")
+
+    def alloc(self, name: str, template):
+        self._groups[name] = alloc_checkpoint_dir(
+            os.path.join(self.directory, name), template,
+            metadata={"group": name, "n_clients": self.n})
+
+    def flush(self):
+        for tree in self._groups.values():
+            for l in jax.tree.leaves(tree):
+                if isinstance(l, np.memmap):
+                    l.flush()
+
+    def reopen(self, name: str, like):
+        """Re-open a flushed group read-only via ``open_checkpoint_dir``
+        (checkpoint-compat check; ``like`` carries the (C, ...) tree
+        structure)."""
+        self.flush()
+        return open_checkpoint_dir(os.path.join(self.directory, name),
+                                   like, mode="r")
+
+
+def make_store(backend: str, n: int, *, directory: Optional[str] = None
+               ) -> ClientStore:
+    if backend == "host":
+        return HostStore(n)
+    if backend == "disk":
+        return DiskStore(n, directory)
+    raise ValueError(f"unknown client-store backend {backend!r} "
+                     "(expected 'host' or 'disk')")

@@ -109,6 +109,33 @@ def scatter_clients(tree, idx, new):
                         tree, new)
 
 
+def host_gather_clients(tree, idx):
+    """Host-side :func:`gather_clients`: leaves are numpy arrays (or
+    ``np.memmap`` disk views) and the result is a dense (S, ...) numpy
+    copy — fancy indexing touches only the requested rows, which is the
+    O(k)-IO contract the streamed client store's cohort staging relies
+    on."""
+    import numpy as np
+    idx = np.asarray(idx)
+    return jax.tree.map(lambda l: np.asarray(l[idx]), tree)
+
+
+def host_scatter_clients(tree, idx, new):
+    """Host-side :func:`scatter_clients`: writes (S, ...) rows back into
+    numpy/memmap leaves IN PLACE (row assignment casts to the leaf's
+    dtype, matching the device scatter's ``astype``).  ``new`` may hold
+    device arrays — the assignment is the stream's D2H edge.  Returns
+    ``tree`` for symmetry."""
+    import numpy as np
+    idx = np.asarray(idx)
+
+    def put(dst, src):
+        dst[idx] = np.asarray(src)
+        return dst
+
+    return jax.tree.map(put, tree, new)
+
+
 def scatter_clients_shard(tree, idx, new, *, offset, size):
     """Shard-local :func:`scatter_clients` for cohort-sharded pytrees.
 

@@ -138,9 +138,27 @@ def ucb_new_round(state: dict, *, gamma: float) -> dict:
     }
 
 
+def ucb_update_selected(state: dict, idx, losses, *, n: int,
+                        gamma: float) -> dict:
+    """:func:`ucb_update` from a (k,) selection + per-selected losses:
+    scatters them into the dense (N,) mask/loss vectors exactly as the
+    fused round iteration does (``zeros.at[idx].set``), so the streamed
+    driver's per-iteration bandit update is the same program as the
+    in-scan one."""
+    sel = jnp.zeros((n,), jnp.float32).at[idx].set(1.0)
+    dense = jnp.zeros((n,), jnp.float32).at[idx].set(
+        losses.astype(jnp.float32))
+    return ucb_update(state, sel, dense, gamma=gamma)
+
+
 @functools.partial(jax.jit, static_argnames=("k",))
 def _select_jit(state, k, key):
     return ucb_select(state, k, key)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "gamma"))
+def _update_selected_jit(state, idx, losses, n, gamma):
+    return ucb_update_selected(state, idx, losses, n=n, gamma=gamma)
 
 
 @functools.partial(jax.jit, static_argnames=("gamma",))
@@ -178,6 +196,22 @@ class Orchestrator:
     # -- key schedule shared with the round scan ----------------------
     def select_key(self, counter: int):
         return jax.random.fold_in(self._base_key, counter)
+
+    def select_on(self, state: dict, counter: int):
+        """Selection for an explicit DEVICE state at key-schedule
+        position ``counter`` WITHOUT advancing the host counter: the
+        streamed driver resolves each iteration's selection ahead of
+        staging its cohort rows (the round boundary hoists select before
+        the gather) and ``ingest_round`` later advances ``_n_selects``
+        for the whole round in one go."""
+        return _select_jit(state, self.k, self.select_key(counter))
+
+    def update_on(self, state: dict, idx, losses):
+        """Streamed counterpart of :meth:`update` on an explicit device
+        state: scatter the (k,) selection + losses into the dense bandit
+        update (history replay happens later via ``ingest_round``)."""
+        return _update_selected_jit(state, idx, losses, self.n,
+                                    self.gamma)
 
     # ------------------------------------------------------------------
     def advantage(self) -> np.ndarray:

@@ -1,0 +1,184 @@
+"""checkpoint/io round-trips for stacked (C, ...) client trees.
+
+The client store (``core/client_store``) spills whole client
+populations through these layouts, so the contracts it leans on are
+pinned here: dtype/shape preservation through both layouts (including
+bf16's uint16 disk view), O(k) partial-row loads that match slicing the
+full restore, uninitialized-alloc -> fill -> reopen equivalence, and a
+hypothesis save -> load -> save stability property.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (alloc_checkpoint_dir, from_disk_view,
+                                 open_checkpoint_dir, restore_checkpoint,
+                                 save_checkpoint, save_checkpoint_dir)
+
+
+def _stacked_tree(c=7, seed=0):
+    """A client-store-shaped tree: nested dict/list, mixed dtypes with a
+    leading client axis C on every leaf."""
+    rng = np.random.default_rng(seed)
+    return {
+        "cp": {"w": rng.normal(size=(c, 4, 3)).astype(np.float32),
+               "b": rng.normal(size=(c, 3)).astype(np.float32)},
+        "co": {"step": rng.integers(0, 50, (c,)).astype(np.int32),
+               "m": [rng.normal(size=(c, 4, 3)).astype(np.float32),
+                     rng.normal(size=(c, 3)).astype(np.float32)]},
+        "half": jnp.asarray(rng.normal(size=(c, 5)),
+                            jnp.bfloat16),
+    }
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.dtype(x.dtype) == np.dtype(y.dtype), (x.dtype, y.dtype)
+        assert x.shape == y.shape
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# npz layout
+# ---------------------------------------------------------------------------
+
+
+def test_npz_roundtrip_preserves_dtypes_and_shapes(tmp_path):
+    tree = _stacked_tree()
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, tree, {"round": 3})
+    back, meta = restore_checkpoint(path, tree)
+    assert meta == {"round": 3}
+    _assert_trees_equal(tree, back)
+
+
+def test_npz_partial_rows_matches_full_slice(tmp_path):
+    """rows= restore of k client rows == slicing the full restore."""
+    tree = _stacked_tree(c=9)
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, tree)
+    rows = np.asarray([1, 4, 8])
+    like = jax.tree.map(lambda l: np.zeros((3,) + l.shape[1:],
+                                           np.dtype(l.dtype)), tree)
+    part, _ = restore_checkpoint(path, like, rows=rows)
+    full, _ = restore_checkpoint(path, tree)
+    _assert_trees_equal(part, jax.tree.map(lambda l: l[rows], full))
+
+
+# ---------------------------------------------------------------------------
+# directory layout (DiskStore backend)
+# ---------------------------------------------------------------------------
+
+
+def test_dir_roundtrip_and_memmap_rows(tmp_path):
+    tree = _stacked_tree(c=9)
+    path = str(tmp_path / "ckdir")
+    save_checkpoint_dir(path, tree, {"n_clients": 9})
+    mms, meta = open_checkpoint_dir(path, tree)
+    assert meta["n_clients"] == 9
+    rows = np.asarray([0, 5])
+    for (key, src), dst in zip(
+            [("f32", tree["cp"]["w"]), ("bf16", tree["half"])],
+            [mms["cp"]["w"], mms["half"]]):
+        # bf16 leaves surface as their uint16 disk view; the sidecar's
+        # dtype map + from_disk_view recover the logical rows
+        got = dst[rows]
+        if key == "bf16":
+            assert got.dtype == np.uint16
+            got = from_disk_view(got, "bfloat16")
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(src)[rows])
+
+
+def test_dir_alloc_fill_reopen(tmp_path):
+    """The DiskStore lifecycle: alloc uninitialized memmaps, fill row
+    ranges, reopen read-only and see the same bytes."""
+    tree = _stacked_tree(c=6)
+    like = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+    path = str(tmp_path / "alloc")
+    mms = alloc_checkpoint_dir(path, like, {"group": "cp"})
+    for i0 in (0, 3):                     # chunked fill
+        rows = np.arange(i0, i0 + 3)
+        jax.tree.map(lambda dst, src: dst.__setitem__(
+            rows, np.asarray(src)[rows].view(dst.dtype)), mms, tree)
+    jax.tree.map(lambda l: l.flush(), mms)
+    back, meta = open_checkpoint_dir(path, tree)
+    assert meta["group"] == "cp"
+    logical = jax.tree.map(lambda l: np.asarray(l).view(
+        np.uint16 if l.dtype == jnp.bfloat16 else l.dtype), tree)
+    _assert_trees_equal(logical, back)
+
+
+def test_dir_key_mismatch_raises(tmp_path):
+    tree = _stacked_tree(c=2)
+    path = str(tmp_path / "ckdir")
+    save_checkpoint_dir(path, tree)
+    with pytest.raises(ValueError, match="keys"):
+        open_checkpoint_dir(path, {"other": tree["cp"]})
+
+
+# ---------------------------------------------------------------------------
+# property: save -> load -> save is stable
+# ---------------------------------------------------------------------------
+
+# float64 is excluded: the npz restore path re-enters jax (jnp.asarray),
+# which downcasts it under the default x64-off mode
+_DTYPES = [np.float32, np.int32, np.float16, np.uint16]
+
+
+def test_save_load_save_stable(tmp_path):
+    """Property (hypothesis when available, seeded sweep otherwise):
+    loading a checkpoint and saving it again writes bit-identical
+    leaves — no dtype drift, no shape churn, either layout."""
+    def roundtrip_twice(tree, layout, base):
+        p1, p2 = str(base / "a"), str(base / "b")
+        if layout == "npz":
+            save_checkpoint(p1, tree)
+            t1, _ = restore_checkpoint(p1, tree)
+            save_checkpoint(p2, t1)
+            t2, _ = restore_checkpoint(p2, tree)
+        else:
+            save_checkpoint_dir(p1, tree)
+            t1, _ = open_checkpoint_dir(p1, tree)
+            save_checkpoint_dir(p2, t1)
+            t2, _ = open_checkpoint_dir(p2, tree)
+        _assert_trees_equal(t1, t2)
+        _assert_trees_equal(tree, t2)
+
+    def random_tree(rng):
+        c = int(rng.integers(1, 6))
+        tree = {}
+        for i in range(int(rng.integers(1, 5))):
+            dt = _DTYPES[int(rng.integers(len(_DTYPES)))]
+            shape = (c,) + tuple(
+                int(rng.integers(1, 5))
+                for _ in range(int(rng.integers(0, 3))))
+            tree[f"leaf{i}"] = rng.integers(-100, 100, shape).astype(dt)
+        return tree
+
+    try:
+        from hypothesis import given, settings, strategies as st
+
+        @given(seed=st.integers(0, 2**31),
+               layout=st.sampled_from(["npz", "dir"]))
+        @settings(max_examples=25, deadline=None)
+        def prop(seed, layout):
+            import shutil
+            base = tmp_path / "hyp"
+            shutil.rmtree(base, ignore_errors=True)
+            base.mkdir()
+            roundtrip_twice(random_tree(np.random.default_rng(seed)),
+                            layout, base)
+
+        prop()
+    except ImportError:
+        for seed in range(25):
+            for layout in ("npz", "dir"):
+                base = tmp_path / f"s{seed}_{layout}"
+                base.mkdir()
+                roundtrip_twice(random_tree(np.random.default_rng(seed)),
+                                layout, base)

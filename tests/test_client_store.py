@@ -1,0 +1,330 @@
+"""Streamed client-store residency (``streamed=True``) differentials.
+
+The split-residency contract: UCB state + selection stay device-
+resident while per-client params/opt/masks live in a host- or
+disk-backed :class:`~repro.core.client_store.ClientStore`; each round
+streams all C clients through the device in ``stream_chunk`` cohorts
+(pass A) and replays the global iterations against the spilled
+activations with only the selected S rows staged (pass B).  The two
+passes commute exactly with the resident interleaving, so a streamed
+run must reproduce the resident ladder:
+
+* selections (orchestrator S history) and the protocol meter channels
+  (bandwidth / client / server FLOPs): EXACT — residency-invariant by
+  construction;
+* ``host_device_bytes``: streamed STRICTLY greater (the store's
+  gather/scatter + activation spill ride this channel on top of the
+  staging every rung bills);
+* CE history / final client state: fp32 tolerance (separately-compiled
+  programs may perturb the last bit).
+
+The streamed+sharded composition test needs 8 emulated host devices —
+CI runs it in the ``test-multidevice`` lane.
+"""
+import subprocess
+import sys
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.adasplit import AdaSplitHParams, AdaSplitTrainer
+from repro.core.client_store import DiskStore, HostStore, make_store
+from repro.data.synthetic import mixed_noniid
+
+CFG = get_config("lenet-cifar")
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 host devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@pytest.fixture(scope="module")
+def clients6():
+    return mixed_noniid(n_clients=6, n_per_client=48, n_test=16, seed=0)
+
+
+def _train(clients, **kw):
+    defaults = dict(rounds=4, kappa=0.5, eta=0.5, batch_size=8, seed=0)
+    defaults.update(kw)
+    tr = AdaSplitTrainer(CFG, AdaSplitHParams(**defaults), clients)
+    tr.train(eval_every=2)
+    return tr
+
+
+def _assert_streamed_matches(st, ref, *, tol=2e-5):
+    assert st._streamed and not ref._streamed
+    # selections + counter: exact (same key schedule, same state math)
+    np.testing.assert_array_equal(st.orch.S, ref.orch.S)
+    assert st.orch._n_selects == ref.orch._n_selects
+    np.testing.assert_allclose(st.orch.L, ref.orch.L, rtol=1e-5,
+                               atol=1e-5)
+    # protocol meters: residency-invariant, exact
+    assert st.meter.bandwidth_bytes == ref.meter.bandwidth_bytes
+    assert st.meter.client_flops == ref.meter.client_flops
+    assert st.meter.server_flops == ref.meter.server_flops
+    # streaming pays the store traffic on its own channel
+    assert st.meter.host_device_bytes > ref.meter.host_device_bytes
+    # full client state (params, opt, masks, mask-opt): fp32 tolerance
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=tol, atol=tol),
+        st.client_state(), ref.client_state())
+    # history records line up (incl. the accuracies at eval rounds)
+    assert len(st.history) == len(ref.history)
+    for h_s, h_r in zip(st.history, ref.history):
+        assert h_s["round"] == h_r["round"]
+        assert h_s["phase"] == h_r["phase"]
+        assert h_s["bandwidth_gb"] == h_r["bandwidth_gb"]
+        if "accuracy" in h_r:
+            assert h_s["accuracy"] == pytest.approx(h_r["accuracy"],
+                                                    abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# differential: streamed == resident across the dispatch ladder
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rung", [
+    dict(round_scan=False),
+    dict(round_scan=True),
+    dict(round_scan=True, epoch_scan=True),
+], ids=["eager", "round_scan", "epoch_scan"])
+def test_streamed_matches_resident(clients6, rung):
+    ref = _train(clients6, **rung)
+    st = _train(clients6, streamed=True, stream_chunk=4, **rung)
+    _assert_streamed_matches(st, ref)
+
+
+def test_diskstore_matches_resident(clients6):
+    ref = _train(clients6)
+    st = _train(clients6, streamed=True, stream_chunk=4,
+                store_backend="disk")
+    assert isinstance(st.store, DiskStore)
+    _assert_streamed_matches(st, ref)
+
+
+def test_disk_and_host_store_bit_identical(clients6):
+    """Backend choice changes WHERE rows live, never their bytes."""
+    h = _train(clients6, streamed=True, stream_chunk=4)
+    d = _train(clients6, streamed=True, stream_chunk=4,
+               store_backend="disk")
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 h.client_state(), d.client_state())
+    assert h.meter.host_device_bytes == d.meter.host_device_bytes
+
+
+@pytest.mark.parametrize("kw", [
+    dict(mask_mode="per_scalar"),
+    dict(act_l1=1e-4),
+    dict(stream_chunk=3),      # even split (the default 4 is ragged)
+    dict(stream_chunk=0),      # auto chunk
+], ids=["per_scalar", "act_l1", "chunk3", "auto_chunk"])
+def test_streamed_variants_match(clients6, kw):
+    base = {k: v for k, v in kw.items() if not k.startswith("stream")}
+    ref = _train(clients6, **base)
+    st = _train(clients6, streamed=True,
+                **{"stream_chunk": 4, **kw})
+    _assert_streamed_matches(st, ref)
+
+
+def test_streamed_chunk1_selections_exact(clients6):
+    """Degenerate one-row chunks: XLA compiles a genuinely different
+    single-row conv program, so param drift per step is ~100x the
+    multi-row chunks' last-bit wiggle (still fp-class) and compounds
+    fast under the sharp NT-Xent temperature.  One all-global round
+    must stay within loose fp32 bounds with selections EXACT."""
+    ref = _train(clients6, rounds=1, kappa=0.0)
+    st = _train(clients6, rounds=1, kappa=0.0, streamed=True,
+                stream_chunk=1)
+    np.testing.assert_array_equal(st.orch.S, ref.orch.S)
+    np.testing.assert_allclose(st.orch.L, ref.orch.L, rtol=1e-4,
+                               atol=1e-4)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-4,
+                                                atol=1e-4),
+        st.client_state(), ref.client_state())
+
+
+def test_streamed_host_device_bytes_rung_invariant(clients6):
+    """The streamed store-billing formula is analytic, so all three
+    dispatch rungs report identical host<->device totals (as the
+    resident rungs do among themselves)."""
+    rungs = [dict(round_scan=False), dict(round_scan=True),
+             dict(round_scan=True, epoch_scan=True)]
+    res = [_train(clients6, **r).meter.host_device_bytes for r in rungs]
+    assert res[0] == res[1] == res[2]
+    stm = [_train(clients6, streamed=True, stream_chunk=4,
+                  **r).meter.host_device_bytes for r in rungs]
+    assert stm[0] == stm[1] == stm[2]
+    assert stm[0] > res[0]
+
+
+# ---------------------------------------------------------------------------
+# fallbacks
+# ---------------------------------------------------------------------------
+
+
+def test_streamed_joint_ablation_falls_back(tiny_clients):
+    """server_grad_to_client updates client params mid-round, breaking
+    the two-pass commutation — must warn and run resident."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        tr = AdaSplitTrainer(
+            CFG, AdaSplitHParams(rounds=1, kappa=0.0, batch_size=8,
+                                 streamed=True,
+                                 server_grad_to_client=True),
+            tiny_clients)
+    assert not tr._streamed
+    assert tr.store is None
+    assert any("commute" in str(x.message) for x in w)
+    hist = tr.train(eval_every=10)
+    assert hist[-1]["bandwidth_gb"] > 0
+
+
+def test_streamed_requires_global_batch(tiny_clients):
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        tr = AdaSplitTrainer(
+            CFG, AdaSplitHParams(rounds=1, batch_size=8, streamed=True,
+                                 global_batch=False), tiny_clients)
+    assert not tr._streamed
+    assert any("global_batch" in str(x.message) for x in w)
+
+
+# ---------------------------------------------------------------------------
+# store unit tests (both backends over the one row-indexed contract)
+# ---------------------------------------------------------------------------
+
+
+def _store_tree(c):
+    rng = np.random.default_rng(0)
+    return {"w": rng.normal(size=(c, 3, 2)).astype(np.float32),
+            "step": np.arange(c, dtype=np.int32)}
+
+
+@pytest.mark.parametrize("backend", ["host", "disk"])
+def test_store_gather_scatter_roundtrip(backend, tmp_path):
+    c = 10
+    store = make_store(backend, c, directory=str(tmp_path / "s"))
+    tree = _store_tree(c)
+    store.adopt({"g": tree})
+    rows = np.asarray([1, 4, 7])
+    got = store.gather(rows, ("g",))["g"]
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b[rows]),
+                 got, tree)
+    # scatter modified rows back, re-gather sees them
+    new = jax.tree.map(lambda l: l[rows] * 2, tree)
+    store.scatter(rows, {"g": new})
+    again = store.gather(rows, ("g",))["g"]
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 again, new)
+    # untouched rows intact
+    rest = np.asarray([0, 2, 3, 5, 6, 8, 9])
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(a, b[rest]),
+        store.gather(rest, ("g",))["g"], tree)
+    # byte accounting: row_nbytes * n == nbytes
+    assert store.nbytes(("g",)) == store.row_nbytes(("g",)) * c
+
+
+def test_make_store_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="unknown client-store"):
+        make_store("s3", 4)
+
+
+def test_diskstore_is_a_valid_checkpoint(tmp_path):
+    """flush() leaves a directory checkpoint another process could
+    open_checkpoint_dir — the spill doubles as a resumable snapshot."""
+    c = 6
+    store = DiskStore(c, str(tmp_path / "spill"))
+    tree = _store_tree(c)
+    store.adopt({"g": tree})
+    back, meta = store.reopen("g", tree)
+    assert meta["group"] == "g"
+    assert meta["n_clients"] == c
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 back, tree)
+
+
+def test_hoststore_accepts_device_rows():
+    """Scatter of jax device arrays is the D2H edge — rows land as the
+    store dtype."""
+    import jax.numpy as jnp
+    store = HostStore(4)
+    store.alloc("g", {"w": jax.ShapeDtypeStruct((4, 2), np.float32)})
+    store.scatter(np.asarray([0, 2]),
+                  {"g": {"w": jnp.ones((2, 2), jnp.float32) * 3}})
+    np.testing.assert_array_equal(
+        store.gather(np.asarray([0, 2]), ("g",))["g"]["w"],
+        np.full((2, 2), 3, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# streamed + cohort-sharded composition (multidevice lane)
+# ---------------------------------------------------------------------------
+
+
+@multidevice
+def test_streamed_sharded_matches_resident_single_device():
+    """The acceptance differential: streamed + shard_clients on 8
+    emulated devices reproduces the resident 1-device scan driver.
+    Chunks are NamedSharding-placed with the cohort axis on ``data``;
+    the per-row-independent client pass needs no collectives, so
+    interconnect stays zero."""
+    clients = mixed_noniid(n_clients=8, n_per_client=32, n_test=16,
+                           seed=0)
+    def train(**kw):
+        hp = AdaSplitHParams(rounds=3, kappa=0.34, batch_size=8, seed=7,
+                             **kw)
+        tr = AdaSplitTrainer(CFG, hp, clients)
+        tr.train(eval_every=10)
+        return tr
+    ref = train()
+    st = train(streamed=True, stream_chunk=4, shard_clients=True)
+    assert st._shard and st._streamed
+    _assert_streamed_matches(st, ref, tol=1e-4)
+    assert st.meter.interconnect_bytes == 0.0
+
+
+SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import numpy as np, jax
+from repro.configs.base import get_config
+from repro.core.adasplit import AdaSplitHParams, AdaSplitTrainer
+from repro.data.synthetic import mixed_noniid
+
+clients = mixed_noniid(n_clients=8, n_per_client=32, n_test=16, seed=0)
+def train(**kw):
+    hp = AdaSplitHParams(rounds=3, kappa=0.34, batch_size=8, seed=7, **kw)
+    tr = AdaSplitTrainer(get_config("lenet-cifar"), hp, clients)
+    tr.train(eval_every=10)
+    return tr
+ref = train(epoch_scan=True)
+st = train(epoch_scan=True, streamed=True, stream_chunk=4,
+           shard_clients=True)
+assert st._shard and st._streamed and jax.device_count() == 8
+np.testing.assert_array_equal(st.orch.S, ref.orch.S)
+np.testing.assert_allclose(st.orch.L, ref.orch.L, rtol=1e-5, atol=1e-5)
+assert st.meter.bandwidth_bytes == ref.meter.bandwidth_bytes
+assert st.meter.interconnect_bytes == 0.0
+d = max(float(abs(np.asarray(a) - np.asarray(b)).max()) for a, b in
+        zip(jax.tree.leaves(st.client_state()),
+            jax.tree.leaves(ref.client_state())))
+assert d < 1e-4, d
+print("STREAM-SHARD-OK")
+"""
+
+
+@pytest.mark.slow
+def test_streamed_sharded_differential_subprocess():
+    """The 8-device streamed epoch differential from a 1-device
+    environment (slow lane)."""
+    r = subprocess.run([sys.executable, "-c", SUBPROC],
+                       capture_output=True, text=True, timeout=1800)
+    assert "STREAM-SHARD-OK" in r.stdout, r.stdout + r.stderr
